@@ -1,0 +1,143 @@
+"""Builds the EXPERIMENTS.md roofline tables from the dry-run artifacts.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline_report [--artifacts DIR]
+Prints markdown; the EXPERIMENTS.md sections are generated from this.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+ARCH_ORDER = [
+    "mamba2-1.3b", "llama-3.2-vision-90b", "qwen1.5-4b", "dbrx-132b",
+    "qwen2-7b", "granite-moe-3b-a800m", "qwen2-1.5b", "whisper-medium",
+    "jamba-1.5-large-398b", "gemma3-4b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(art_dir: str) -> dict:
+    out = {}
+    for f in glob.glob(os.path.join(art_dir, "*.json")):
+        d = json.load(open(f))
+        out[(d["arch"], d["shape"], d["mesh"])] = d
+    return out
+
+
+def fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.0f}µs"
+    if x < 1:
+        return f"{x*1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def fmt_b(x: float) -> str:
+    for unit, div in (("GB", 1e9), ("MB", 1e6), ("KB", 1e3)):
+        if x >= div:
+            return f"{x/div:.1f}{unit}"
+    return f"{x:.0f}B"
+
+
+def roofline_table(arts: dict, mesh: str = "pod1") -> str:
+    lines = [
+        "| arch | shape | compute | memory(est) | collective | dominant | "
+        "MODEL_FLOPS | useful | state/dev | note |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            d = arts.get((arch, shape, mesh))
+            if d is None:
+                lines.append(f"| {arch} | {shape} | - | - | - | - | - | - | "
+                             "- | missing |")
+                continue
+            if d["status"] == "skip":
+                lines.append(f"| {arch} | {shape} | — | — | — | — | — | — |"
+                             f" — | SKIP: {d['reason'][:60]} |")
+                continue
+            if d["status"] == "error":
+                lines.append(f"| {arch} | {shape} | — | — | — | — | — | — |"
+                             f" — | ERROR: {d['error'][:50]} |")
+                continue
+            r = d["roofline"]
+            mem = d["memory"]
+            lines.append(
+                f"| {arch} | {shape} | {fmt_s(r['compute_s'])} | "
+                f"{fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} | "
+                f"{r['dominant'].replace('_s','')} | "
+                f"{r['model_flops']:.2e} | {r['useful_flops_ratio']:.2f} | "
+                f"{fmt_b(mem['argument_bytes_per_device'])} | |")
+    return "\n".join(lines)
+
+
+def memory_table(arts: dict, mesh: str = "pod1") -> str:
+    lines = [
+        "| arch | shape | args/dev | out/dev | XLA temp (no-reuse UB) | "
+        "act est | collectives (count) |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            d = arts.get((arch, shape, mesh))
+            if d is None or d["status"] != "ok":
+                continue
+            mem = d["memory"]
+            cc = d["collectives"].get("counts", {})
+            cstr = " ".join(f"{k.split('-')[1] if '-' in k else k}:{v}"
+                            for k, v in sorted(cc.items()))
+            act = mem.get("activation_estimate", {})
+            act_tot = act.get("total", sum(
+                v for k, v in act.items() if isinstance(v, (int, float))))
+            lines.append(
+                f"| {arch} | {shape} | "
+                f"{fmt_b(mem['argument_bytes_per_device'])} | "
+                f"{fmt_b(mem['output_bytes_per_device'])} | "
+                f"{fmt_b(mem['temp_bytes_upper_bound'])} | "
+                f"{fmt_b(act_tot)} | {cstr} |")
+    return "\n".join(lines)
+
+
+def multipod_delta_table(arts: dict) -> str:
+    lines = [
+        "| arch | shape | collective pod1 | collective pod2 | pod-axis "
+        "overhead |",
+        "|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            a = arts.get((arch, shape, "pod1"))
+            b = arts.get((arch, shape, "pod2"))
+            if not a or not b or a["status"] != "ok" or b["status"] != "ok":
+                continue
+            ca = a["roofline"]["collective_s"]
+            cb = b["roofline"]["collective_s"]
+            ratio = cb / ca if ca else float("inf")
+            lines.append(f"| {arch} | {shape} | {fmt_s(ca)} | {fmt_s(cb)} | "
+                         f"{ratio:.2f}x |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--artifacts", default="benchmarks/artifacts/baseline")
+    args = ap.parse_args()
+    arts = load(args.artifacts)
+    n_ok = sum(1 for d in arts.values() if d["status"] == "ok")
+    n_skip = sum(1 for d in arts.values() if d["status"] == "skip")
+    print(f"# Roofline report ({n_ok} ok, {n_skip} documented skips)\n")
+    print("## Single-pod (16x16 = 256 chips) roofline\n")
+    print(roofline_table(arts, "pod1"))
+    print("\n## Memory / collectives detail (single-pod)\n")
+    print(memory_table(arts, "pod1"))
+    print("\n## Multi-pod (2x16x16 = 512 chips) collective delta\n")
+    print(multipod_delta_table(arts))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,356 @@
+"""Benchmark harness — one benchmark per paper claim/figure (WeiPS has no
+numbered result tables; its quantitative claims are §1.2 second-level
+deployment, §4.1.2a >=90 % update repetition within 10 s, §4.1.3 serialize+
+compress bandwidth, §4.2 multi-level fault tolerance, §4.3 domino
+downgrade). Prints ``name,us_per_call,derived`` CSV rows.
+
+Run: PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def _row(name: str, us: float, derived: str) -> None:
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+# ---------------------------------------------------------------------------
+# 1. Second-level deployment: sync lag vs deployment mechanism (paper §1.2,
+#    §4.1 — streaming update vs checkpoint-reload deployment)
+# ---------------------------------------------------------------------------
+
+
+def bench_deploy_latency(quick: bool) -> None:
+    from repro.configs.weips_ctr import LR_FTRL
+    from repro.core import ClusterConfig, WeiPSCluster
+    from repro.data import ClickStream
+
+    steps = 30 if quick else 80
+    for mode, period in (("realtime", 0.0), ("period", 1.0), ("period", 10.0)):
+        cl = WeiPSCluster(LR_FTRL, ClusterConfig(
+            num_master=4, num_slave=2, num_replicas=2, num_partitions=8,
+            gather_mode=mode, gather_period=period))
+        stream = ClickStream(feature_space=1 << 14, fields=LR_FTRL.fields)
+        t0 = time.perf_counter()
+        now, lags = 0.0, []
+        for i in range(steps):
+            ids, y = stream.batch(128)
+            cl.train_on_batch(ids, y, now=now)
+            cl.sync_tick(now)
+            lags.append(cl.sync_metrics(now)["sync_lag_seconds"])
+            now += 0.2
+        wall = (time.perf_counter() - t0) / steps * 1e6
+        tag = f"{mode}{'' if mode == 'realtime' else f'_{period}s'}"
+        _row(f"deploy_lag/{tag}", wall,
+             f"p50_lag={np.median(lags):.2f}s max_lag={max(lags):.2f}s")
+    # checkpoint-reload deployment baseline (what the paper replaces):
+    # lag = checkpoint interval + reload; with a 60 s interval the mean
+    # staleness is >=30 s vs sub-second streaming.
+    _row("deploy_lag/checkpoint_reload_baseline", 0.0,
+         "p50_lag=30.00s max_lag=60.00s (60s ckpt interval; paper's "
+         "motivation)")
+
+
+# ---------------------------------------------------------------------------
+# 2. Update repetition / dedup within the gather window (paper §4.1.2a:
+#    ">=90 % repetition within 10 seconds")
+# ---------------------------------------------------------------------------
+
+
+def bench_dedup_ratio(quick: bool) -> None:
+    from repro.core.streaming import Gatherer
+    from repro.data import ClickStream
+
+    qps_batches = 20 if quick else 50          # batches per second
+    for window in (1.0, 5.0, 10.0):
+        stream = ClickStream(feature_space=1 << 20, fields=32, zipf_a=1.2,
+                             seed=0)
+        g = Gatherer("period", period=window)
+        t0 = time.perf_counter()
+        now = 0.0
+        n_batches = int(window * qps_batches)
+        for _ in range(n_batches):
+            ids, _ = stream.batch(256)
+            g.offer([("w", ids.reshape(-1), "upsert")])
+            now += 1.0 / qps_batches
+        g.flush(now)
+        us = (time.perf_counter() - t0) / n_batches * 1e6
+        _row(f"gather_dedup/window_{window:.0f}s", us,
+             f"dedup_ratio={g.stats.dedup_ratio:.3f} "
+             f"raw={g.stats.raw_ids} pushed={g.stats.pushed_ids}")
+
+
+# ---------------------------------------------------------------------------
+# 3. Push bandwidth per codec (paper §4.1.3 serialize + compress)
+# ---------------------------------------------------------------------------
+
+
+def bench_codec_bandwidth(quick: bool) -> None:
+    from repro.core.transform import make_transform
+
+    rows = np.random.default_rng(0).normal(
+        size=(4096 if quick else 16384, 16)).astype(np.float32)
+    for codec in ("identity", "cast16", "int8"):
+        t = make_transform(codec)
+        t0 = time.perf_counter()
+        reps = 20
+        for _ in range(reps):
+            payload = t.encode(rows, {})
+        us = (time.perf_counter() - t0) / reps * 1e6
+        nbytes = t.payload_bytes(payload)
+        _row(f"codec_bandwidth/{codec}", us,
+             f"bytes_per_row={nbytes/len(rows):.1f} "
+             f"ratio_vs_f32={nbytes/(rows.nbytes):.3f}")
+
+
+# ---------------------------------------------------------------------------
+# 4. Fault tolerance: hot failover vs cold recovery (paper §4.2)
+# ---------------------------------------------------------------------------
+
+
+def bench_fault_tolerance(quick: bool) -> None:
+    from repro.configs.weips_ctr import LR_FTRL
+    from repro.core import ClusterConfig, WeiPSCluster
+    from repro.data import ClickStream
+
+    cl = WeiPSCluster(LR_FTRL, ClusterConfig(
+        num_master=4, num_slave=2, num_replicas=2, num_partitions=8))
+    stream = ClickStream(feature_space=1 << 14, fields=LR_FTRL.fields)
+    now = 0.0
+    for i in range(20 if quick else 60):
+        ids, y = stream.batch(256)
+        cl.train_on_batch(ids, y, now=now)
+        cl.sync_tick(now)
+        now += 0.2
+    cl.checkpoint(now)
+
+    # hot failover: kill a replica mid-serving; count failed requests
+    ids_eval, _ = stream.batch(64)
+    cl.kill_slave_replica(0, 0)
+    t0 = time.perf_counter()
+    failed = 0
+    for _ in range(20):
+        try:
+            cl.predict(ids_eval)
+        except RuntimeError:
+            failed += 1
+    us = (time.perf_counter() - t0) / 20 * 1e6
+    _row("fault/hot_failover", us,
+         f"failed_requests={failed} failovers={cl.replica_sets[0].failovers}")
+
+    # cold recovery: kill a master shard, restore from checkpoint + replay
+    rows_before = len(cl.masters[1].tables["w"])
+    t0 = time.perf_counter()
+    cl.kill_master(1)
+    cl.recover_master(1)
+    cl.sync_tick(now + 1)
+    us = (time.perf_counter() - t0) * 1e6
+    _row("fault/cold_partial_recovery", us,
+         f"rows_restored={len(cl.masters[1].tables['w'])} "
+         f"rows_before={rows_before} cluster_restart=False")
+
+
+# ---------------------------------------------------------------------------
+# 5. Domino downgrade: detection latency + serving restoration (paper §4.3)
+# ---------------------------------------------------------------------------
+
+
+def bench_downgrade(quick: bool) -> None:
+    import dataclasses
+
+    from repro.configs.weips_ctr import LR_FTRL
+    from repro.core import ClusterConfig, WeiPSCluster
+    from repro.data import ClickStream
+
+    for window in (3, 10):
+        cfg = dataclasses.replace(LR_FTRL, ftrl_l1=0.01, ftrl_alpha=0.3)
+        cl = WeiPSCluster(cfg, ClusterConfig(
+            num_master=2, num_slave=1, num_replicas=1, num_partitions=2,
+            downgrade_metric="logloss", downgrade_threshold=0.72,
+            downgrade_window=window))
+        stream = ClickStream(feature_space=1 << 8, fields=cfg.fields,
+                             signal_scale=1.0)
+        now = 0.0
+        for i in range(30):
+            ids, y = stream.batch(128)
+            cl.train_on_batch(ids, y, now=now)
+            cl.sync_tick(now)
+            now += 0.5
+        cl.checkpoint(now)
+        false_alarms = 1 if cl.downgrade_check(now) else 0
+        stream.corrupt(scale=2.0)
+        detect_batches = None
+        t0 = time.perf_counter()
+        for i in range(30):
+            ids, y = stream.batch(128)
+            cl.train_on_batch(ids, y, now=now)
+            now += 0.5
+            if cl.downgrade_check(now) is not None:
+                detect_batches = i + 1
+                break
+        us = (time.perf_counter() - t0) * 1e6
+        _row(f"downgrade/window_{window}", us,
+             f"detect_batches={detect_batches} false_alarm={false_alarms} "
+             f"rollbacks={len(cl.downgrader.downgrades)}")
+
+
+# ---------------------------------------------------------------------------
+# 6. PS operation throughput (pull / push paths)
+# ---------------------------------------------------------------------------
+
+
+def bench_ps_throughput(quick: bool) -> None:
+    from repro.core.ps import MasterShard
+    from repro.optim import get_optimizer
+
+    shard = MasterShard(0, {"w": 16}, get_optimizer("ftrl"))
+    rng = np.random.default_rng(0)
+    ids = rng.choice(1 << 22, size=4096, replace=False).astype(np.int64)
+    grads = rng.normal(size=(4096, 16)).astype(np.float32)
+    shard.push_grad("w", ids, grads)          # warm-up/row creation
+    reps = 10 if quick else 30
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        shard.pull("w", ids)
+    pull_us = (time.perf_counter() - t0) / reps * 1e6
+    _row("ps/pull_4096x16", pull_us,
+         f"rows_per_s={4096/(pull_us/1e6):.0f}")
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        shard.push_grad("w", ids, grads)
+    push_us = (time.perf_counter() - t0) / reps * 1e6
+    _row("ps/push_grad_4096x16", push_us,
+         f"rows_per_s={4096/(push_us/1e6):.0f}")
+
+
+# ---------------------------------------------------------------------------
+# 7. Kernel microbenches (interpret-mode correctness path on CPU; the
+#    derived column carries the oracle-vs-kernel max error)
+# ---------------------------------------------------------------------------
+
+
+def bench_kernels(quick: bool) -> None:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops, ref
+
+    key = jax.random.PRNGKey(0)
+    table = jax.random.normal(key, (1 << 14, 128))
+    ids = jax.random.randint(key, (1024,), 0, 1 << 14)
+
+    def timed(fn, *args, reps=3):
+        out = fn(*args)
+        jax.block_until_ready(out)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = fn(*args)
+            jax.block_until_ready(out)
+        return out, (time.perf_counter() - t0) / reps * 1e6
+
+    got, us = timed(ops.embedding_lookup, table, ids)
+    err = float(jnp.abs(got - ref.embedding_lookup(table, ids)).max())
+    _row("kernel/embedding_lookup_1024x128", us, f"max_err={err:.1e}")
+
+    z = jax.random.normal(key, (1024, 128))
+    n = jax.random.uniform(key, (1024, 128)) * 4
+    g = jax.random.normal(key, (1024, 128))
+    got, us = timed(ops.ftrl_row_update, z, n, g)
+    want = ref.ftrl_row_update(z, n, g, alpha=0.05, beta=1.0, l1=1.0, l2=1.0)
+    err = max(float(jnp.abs(a - b).max()) for a, b in zip(got, want))
+    _row("kernel/ftrl_row_update_1024x128", us, f"max_err={err:.1e}")
+
+    x = jax.random.normal(key, (1024, 128))
+    (q, s), us = timed(lambda v: ops.quantize_rows(v), x)
+    _row("kernel/quantize_rows_1024x128", us,
+         f"compression=4x wire_bytes={q.nbytes + s.nbytes}")
+
+    if not quick:
+        qq = jax.random.normal(key, (1, 8, 256, 128))
+        kk = jax.random.normal(key, (1, 2, 256, 128))
+        vv = jax.random.normal(key, (1, 2, 256, 128))
+        got, us = timed(ops.flash_attention, qq, kk, vv, reps=1)
+        err = float(jnp.abs(got - ref.flash_attention(qq, kk, vv)).max())
+        _row("kernel/flash_attention_256", us, f"max_err={err:.1e}")
+
+        qd = jax.random.normal(key, (2, 8, 128))
+        kd = jax.random.normal(key, (2, 1024, 2, 128))
+        vd = jax.random.normal(key, (2, 1024, 2, 128))
+        lens = jnp.array([800, 1024], jnp.int32)
+        got, us = timed(ops.decode_attention, qd, kd, vd, lens, reps=1)
+        err = float(jnp.abs(got - ref.decode_attention(qd, kd, vd,
+                                                       lens)).max())
+        _row("kernel/decode_attention_1024", us, f"max_err={err:.1e}")
+
+
+# ---------------------------------------------------------------------------
+# 8. Full-model sync engine bandwidth (the LM-zoo application of the
+#    paper's mechanism): bytes/flush per codec + expert granularity
+# ---------------------------------------------------------------------------
+
+
+def bench_model_sync(quick: bool) -> None:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config, reduced
+    from repro.core.sync_engine import ModelSyncEngine, SyncConfig
+    from repro.training import init_train_state, make_train_step
+
+    cfg = reduced(get_config("granite-moe-3b-a800m"))
+    step = make_train_step(cfg)
+    rng = np.random.default_rng(0)
+    for codec in ("cast16", "int8"):
+        st = init_train_state(cfg, jax.random.PRNGKey(0))
+        engine = ModelSyncEngine(cfg, st.params, SyncConfig(
+            gather_mode="period", period=1.0, codec=codec))
+        t0 = time.perf_counter()
+        steps = 4 if quick else 8
+        for t in range(steps):
+            tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 32)),
+                                 jnp.int32)
+            st, metrics = step(st, {"tokens": tokens})
+            engine.collect_step(np.asarray(tokens), {
+                "expert_counts_per_layer": jax.tree.map(
+                    np.asarray, metrics["expert_counts_per_layer"])})
+            engine.tick(st.params, now=float(t))
+        engine.tick(st.params, now=1e9)
+        us = (time.perf_counter() - t0) / steps * 1e6
+        m = engine.metrics()
+        stale = engine.replicas[0].staleness(st.params)
+        _row(f"model_sync/{codec}", us,
+             f"bytes={m['pushed_bytes']} dedup={m['dedup_ratio']:.2f} "
+             f"staleness={stale:.1e}")
+
+
+BENCHES = [
+    ("deploy_latency", bench_deploy_latency),
+    ("dedup_ratio", bench_dedup_ratio),
+    ("codec_bandwidth", bench_codec_bandwidth),
+    ("fault_tolerance", bench_fault_tolerance),
+    ("downgrade", bench_downgrade),
+    ("ps_throughput", bench_ps_throughput),
+    ("kernels", bench_kernels),
+    ("model_sync", bench_model_sync),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for name, fn in BENCHES:
+        if args.only and args.only != name:
+            continue
+        fn(args.quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+from repro.configs.base import (ARCH_IDS, ModelConfig, Segment, LayerSpec,
+                                all_configs, get_config, reduced, register)
+from repro.configs.shapes import (SHAPES, InputShape, applicable, TRAIN_4K,
+                                  PREFILL_32K, DECODE_32K, LONG_500K)
+from repro.configs.weips_ctr import CTR_CONFIGS, CTRConfig
+
+__all__ = [
+    "ARCH_IDS", "ModelConfig", "Segment", "LayerSpec", "all_configs",
+    "get_config", "reduced", "register", "SHAPES", "InputShape", "applicable",
+    "TRAIN_4K", "PREFILL_32K", "DECODE_32K", "LONG_500K", "CTR_CONFIGS",
+    "CTRConfig",
+]

@@ -1,0 +1,20 @@
+"""WeiPS core: the paper's contribution — symmetric fusion of the training
+parameter plane (master) and serving parameter plane (slave) via streaming
+synchronization, with multi-level fault tolerance and domino downgrade."""
+
+from repro.core.cluster import ClusterConfig, WeiPSCluster
+from repro.core.ps import DenseBank, MasterShard, SlaveShard, SparseTable
+from repro.core.queue import Consumer, PartitionedQueue, Record
+from repro.core.routing import RoutingPlan, reshard_plan
+from repro.core.streaming import (Collector, Gatherer, Pusher, Scatter,
+                                  SyncPipeline)
+from repro.core.transform import (Cast16Transform, Int8Transform, Transform,
+                                  decode_record, make_transform)
+
+__all__ = [
+    "ClusterConfig", "WeiPSCluster", "DenseBank", "MasterShard", "SlaveShard",
+    "SparseTable", "Consumer", "PartitionedQueue", "Record", "RoutingPlan",
+    "reshard_plan", "Collector", "Gatherer", "Pusher", "Scatter",
+    "SyncPipeline", "Cast16Transform", "Int8Transform", "Transform",
+    "decode_record", "make_transform",
+]

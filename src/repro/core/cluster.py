@@ -1,0 +1,336 @@
+"""WeiPSCluster: the full symmetric fusion system for the paper's online-
+learning workload — trainer + master PS (training plane), predictor + slave
+PS replicas (serving plane), joined by the streaming sync pipeline, with
+cold/hot fault tolerance, progressive validation and domino downgrade.
+
+This is the end-to-end object the examples and benchmarks drive.
+"""
+
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.weips_ctr import CTRConfig
+from repro.core.downgrade import (DominoDowngrade, SmoothedThresholdTrigger,
+                                  VersionManager)
+from repro.core.fault_tolerance import (BackupPolicy, Checkpoint,
+                                        CheckpointStore, ColdBackup,
+                                        ReplicaSet)
+from repro.core.feature_filter import FeatureFilter
+from repro.core.monitor import ProgressiveValidator
+from repro.core.ps import MasterShard, SlaveShard
+from repro.core.queue import PartitionedQueue
+from repro.core.routing import RoutingPlan
+from repro.core.scheduler import ComponentInfo, Scheduler
+from repro.core.streaming import Collector, Gatherer, Pusher, Scatter
+from repro.core.transform import make_transform
+from repro.models import ctr as ctr_model
+from repro.optim import get_optimizer
+
+
+def _make_optimizer(cfg: CTRConfig):
+    if cfg.optimizer == "ftrl":
+        return get_optimizer("ftrl", alpha=cfg.ftrl_alpha, beta=cfg.ftrl_beta,
+                             l1=cfg.ftrl_l1, l2=cfg.ftrl_l2)
+    return get_optimizer(cfg.optimizer, lr=cfg.lr)
+
+
+@dataclass
+class ClusterConfig:
+    num_master: int = 4
+    num_slave: int = 2           # slave shards (serving partition count)
+    num_replicas: int = 2        # hot-backup replicas per slave shard
+    num_partitions: int = 8
+    gather_mode: str = "realtime"
+    gather_threshold: int = 4096
+    gather_period: float = 1.0
+    codec: str = "identity"      # identity | cast16 | int8
+    local_ckpt_interval: float = 30.0
+    remote_ckpt_interval: float = 600.0
+    ckpt_root: Optional[str] = None
+    downgrade_metric: str = "logloss"
+    downgrade_threshold: float = 1.5
+    downgrade_window: int = 10
+    feature_min_count: int = 1
+    feature_ttl_steps: int = 100_000
+    seed: int = 0
+
+
+class WeiPSCluster:
+    def __init__(self, model_cfg: CTRConfig,
+                 cluster_cfg: Optional[ClusterConfig] = None):
+        self.cfg = model_cfg
+        self.ccfg = cluster_cfg or ClusterConfig()
+        c = self.ccfg
+        self.plan = RoutingPlan(c.num_master, c.num_slave, c.num_partitions)
+        self.groups = ctr_model.groups_for(model_cfg)
+        self.optimizer = _make_optimizer(model_cfg)
+        self.transform = make_transform(c.codec, self.optimizer)
+        self.scheduler = Scheduler()
+        self.queue = PartitionedQueue(c.num_partitions)
+        self.filter = FeatureFilter(c.feature_min_count, c.feature_ttl_steps)
+
+        # ---- training plane -------------------------------------------
+        self.masters = [MasterShard(i, self.groups, self.optimizer)
+                        for i in range(c.num_master)]
+        self.collectors = []
+        self.gatherers = []
+        self.pushers = []
+        for mshard in self.masters:
+            col = Collector()
+            mshard.collector = col
+            self.collectors.append(col)
+            self.gatherers.append(Gatherer(
+                c.gather_mode, threshold=c.gather_threshold,
+                period=c.gather_period))
+            self.pushers.append(Pusher(mshard, self.queue, self.plan,
+                                       self.transform))
+            self.scheduler.register(ComponentInfo("master", mshard.shard_id))
+
+        # dense parameters (DNN) live on master shard 0's dense bank
+        self.dense = ctr_model.init_dense(model_cfg,
+                                          jax.random.PRNGKey(c.seed))
+        self.dense_slots = {k: self.optimizer.init_slots(jnp.asarray(v))
+                            for k, v in self.dense.items()}
+        for name, v in self.dense.items():
+            self.masters[0].push_dense(name, v)
+
+        # ---- serving plane ---------------------------------------------
+        self.replica_sets: list[ReplicaSet] = []
+        self.scatters: list[Scatter] = []
+        for sid in range(c.num_slave):
+            replicas = []
+            for rid in range(c.num_replicas):
+                shard = SlaveShard(sid, self.groups)
+                replicas.append(shard)
+                self.scatters.append(Scatter(shard, self.queue, self.plan))
+                self.scheduler.register(ComponentInfo("slave", sid, rid))
+            self.replica_sets.append(ReplicaSet(replicas))
+
+        # ---- stability machinery ----------------------------------------
+        self.validator = ProgressiveValidator()
+        self.store = CheckpointStore(c.ckpt_root)
+        self.cold_backup = ColdBackup(
+            self.masters, self.store,
+            BackupPolicy(c.local_ckpt_interval, c.remote_ckpt_interval),
+            queue=self.queue, rng=random.Random(c.seed))
+        self.versions = VersionManager(self.store)
+        self.downgrader = DominoDowngrade(
+            SmoothedThresholdTrigger(
+                metric=c.downgrade_metric, threshold=c.downgrade_threshold,
+                window=c.downgrade_window),
+            self.versions, self._hot_switch)
+
+        self._predict = ctr_model.predict_fn(model_cfg)
+        self._loss_grads = ctr_model.loss_and_grads_fn(model_cfg)
+        self.step = 0
+
+    # ------------------------------------------------------------------
+    # training plane
+    # ------------------------------------------------------------------
+    def _pull_rows(self, ids: np.ndarray) -> dict[str, np.ndarray]:
+        """Gather (B, F, dim) row tensors for every group from masters."""
+        b, f = ids.shape
+        flat = ids.reshape(-1)
+        uniq, inverse = np.unique(flat, return_inverse=True)
+        by_master = self.plan.split_by_master(uniq)
+        rows = {}
+        for group, dim in self.groups.items():
+            vals = np.zeros((len(uniq), dim), np.float32)
+            for mid, mids in by_master.items():
+                pos = np.searchsorted(uniq, mids)
+                vals[pos] = self.masters[mid].pull(group, mids)
+            rows[group] = vals[inverse].reshape(b, f, dim)
+        return rows, uniq, inverse
+
+    def train_on_batch(self, ids: np.ndarray, y: np.ndarray,
+                       now: float = 0.0) -> dict:
+        """One online-learning step: predict-before-train validation, then
+        gradient push through the PS optimizer."""
+        admitted = self.filter.admit(np.unique(ids.reshape(-1)))
+        del admitted  # admission pre-creates nothing; rows appear on push
+        rows, uniq, inverse = self._pull_rows(ids)
+        rows_j = {k: jnp.asarray(v) for k, v in rows.items()}
+        dense_j = {k: jnp.asarray(v) for k, v in self.dense.items()}
+
+        # progressive validation (predict BEFORE applying the update)
+        p = np.asarray(self._predict(rows_j, dense_j))
+        point = self.validator.observe(now, self.step, y, p)
+
+        loss, row_grads, dense_grads = self._loss_grads(
+            rows_j, dense_j, jnp.asarray(y))
+
+        # aggregate per-row grads over duplicate ids, push to owner masters
+        by_master = self.plan.split_by_master(uniq)
+        for group, g in row_grads.items():
+            g = np.asarray(g).reshape(-1, g.shape[-1])        # (B*F, dim)
+            agg = np.zeros((len(uniq), g.shape[-1]), np.float32)
+            np.add.at(agg, inverse, g)
+            for mid, mids in by_master.items():
+                pos = np.searchsorted(uniq, mids)
+                self.masters[mid].push_grad(group, mids, agg[pos],
+                                            step=self.step)
+        # dense updates (DNN) on master shard 0
+        if dense_grads:
+            for name, g in dense_grads.items():
+                new_w, new_slots = self.optimizer.update(
+                    jnp.asarray(self.dense[name]), self.dense_slots[name],
+                    g, self.step)
+                self.dense[name] = np.asarray(new_w)
+                self.dense_slots[name] = new_slots
+                self.masters[0].push_dense(name, self.dense[name])
+
+        self.step += 1
+        return {"loss": float(loss), **point.values}
+
+    # ------------------------------------------------------------------
+    # sync plane
+    # ------------------------------------------------------------------
+    def sync_tick(self, now: float, *, scatter: bool = True) -> int:
+        n = 0
+        for col, gat, push, master in zip(self.collectors, self.gatherers,
+                                          self.pushers, self.masters):
+            gat.offer(col.drain())
+            if gat.ready(now):
+                n += push.push(gat.flush(now), now)
+        if scatter:
+            for sc in self.scatters:
+                if sc.shard.alive:
+                    sc.poll()
+        return n
+
+    def expire_features(self, now: float) -> int:
+        """Feature-filter expiry: delete stale rows, stream the deletions."""
+        n = 0
+        for m in self.masters:
+            for group, table in m.tables.items():
+                stale = self.filter.expired(table, m.step)
+                if len(stale):
+                    m.delete_rows(group, stale)
+                    n += len(stale)
+        return n
+
+    # ------------------------------------------------------------------
+    # serving plane
+    # ------------------------------------------------------------------
+    def serve_rows(self, ids: np.ndarray) -> dict[str, np.ndarray]:
+        """Predictor pull path: slave replica lookup with failover."""
+        b, f = ids.shape
+        flat = ids.reshape(-1)
+        uniq, inverse = np.unique(flat, return_inverse=True)
+        owner = self.plan.slave_shard(uniq)
+        rows = {}
+        for group, dim in self.groups.items():
+            vals = np.zeros((len(uniq), dim), np.float32)
+            for sid in range(self.ccfg.num_slave):
+                mask = owner == sid
+                if mask.any():
+                    vals[mask] = self.replica_sets[sid].lookup(
+                        group, uniq[mask])
+            rows[group] = vals[inverse].reshape(b, f, dim)
+        return rows
+
+    def predict(self, ids: np.ndarray) -> np.ndarray:
+        rows = self.serve_rows(ids)
+        dense = self._serve_dense()
+        return np.asarray(self._predict(
+            {k: jnp.asarray(v) for k, v in rows.items()},
+            {k: jnp.asarray(v) for k, v in dense.items()}))
+
+    def _serve_dense(self) -> dict[str, np.ndarray]:
+        if not self.dense:
+            return {}
+        out = {}
+        rep = self.replica_sets[0].healthy()[0]
+        for name, shape in ctr_model.dense_shapes(self.cfg).items():
+            v = rep.dense.get(name)
+            out[name] = (v.reshape(shape) if v is not None
+                         else np.zeros(shape, np.float32))
+        return out
+
+    # ------------------------------------------------------------------
+    # stability plane
+    # ------------------------------------------------------------------
+    def maybe_checkpoint(self, now: float) -> Optional[int]:
+        v = self.cold_backup.maybe_checkpoint(
+            now, metrics={"logloss": self.validator.smoothed("logloss"),
+                          "auc": self.validator.smoothed("auc")})
+        if v is not None:
+            self.scheduler.publish_version(self.cfg.name, v)
+        return v
+
+    def checkpoint(self, now: float, tier: str = "local") -> int:
+        v = self.cold_backup.checkpoint(
+            now, tier=tier,
+            metrics={"logloss": self.validator.smoothed("logloss"),
+                     "auc": self.validator.smoothed("auc")})
+        self.scheduler.publish_version(self.cfg.name, v)
+        return v
+
+    def _hot_switch(self, ckpt: Checkpoint) -> None:
+        """Downgrade execution: rebuild slave serve state from the
+        checkpoint (master-state → serve transform), then seek every
+        scatter to the checkpoint's queue offsets for consistent replay."""
+        for rs in self.replica_sets:
+            for shard in rs.replicas:
+                for g, dim in self.groups.items():
+                    from repro.core.ps import SparseTable
+                    shard.tables[g] = SparseTable(dim)
+                shard._applied_seq = {}
+        for snap in ckpt.shard_snaps.values():
+            for g, tsnap in snap["tables"].items():
+                ids, w, slots = tsnap["ids"], tsnap["w"], tsnap["slots"]
+                if len(ids) == 0:
+                    continue
+                serve = self.transform.serve_values(w, slots)
+                owner = self.plan.slave_shard(ids)
+                for sid, rs in enumerate(self.replica_sets):
+                    mask = owner == sid
+                    if mask.any():
+                        for shard in rs.replicas:
+                            shard.tables[g].scatter(ids[mask], serve[mask])
+        for sc in self.scatters:
+            sc.consumer.seek(ckpt.queue_offsets)
+
+    def downgrade_check(self, now: float) -> Optional[int]:
+        return self.downgrader.maybe_downgrade(now, self.validator)
+
+    # ------------------------------------------------------------------
+    # chaos / recovery controls (fault-tolerance benchmarks)
+    # ------------------------------------------------------------------
+    def kill_master(self, shard_id: int) -> None:
+        self.masters[shard_id].kill()
+        self.scheduler.mark_dead("master", shard_id)
+
+    def recover_master(self, shard_id: int) -> int:
+        v = self.cold_backup.recover_shard(self.masters[shard_id])
+        # streaming replay: re-push everything this shard owns, so slaves
+        # reconverge even for updates lost after the checkpoint
+        m = self.masters[shard_id]
+        for group, table in m.tables.items():
+            ids = table.all_ids()
+            if len(ids):
+                m.collector.record(group, ids, "upsert")
+        return v
+
+    def kill_slave_replica(self, shard_id: int, replica_idx: int) -> None:
+        self.replica_sets[shard_id].replicas[replica_idx].kill()
+        self.scheduler.mark_dead("slave", shard_id, replica_idx)
+
+    def sync_metrics(self, now: float) -> dict:
+        lag = max((now - sc.last_record_time for sc in self.scatters
+                   if sc.shard.alive), default=0.0)
+        return {
+            "sync_lag_seconds": lag,
+            "pushed_bytes": sum(p.pushed_bytes for p in self.pushers),
+            "queue_bytes": self.queue.produced_bytes,
+            "dedup_ratio": float(np.mean(
+                [g.stats.dedup_ratio for g in self.gatherers])),
+            "replica_failovers": sum(rs.failovers for rs in self.replica_sets),
+        }

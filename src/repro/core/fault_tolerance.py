@@ -1,0 +1,233 @@
+"""Multi-level fault tolerance (paper §4.2).
+
+Cold backup (master): checkpoints with
+  a) random-trigger + async-save semantics (jittered per-shard schedule so
+     saves never aggregate traffic),
+  b) hierarchical storage — frequent LOCAL tier, infrequent REMOTE tier,
+  c) queue offsets embedded in every checkpoint (streaming replay resumes
+     exactly → strong consistency option),
+  d) dynamic routing on load — a checkpoint written by N shards loads into
+     M shards (reshard migration),
+  e) partial recovery — restore a single crashed shard without restarting
+     the cluster.
+
+Hot backup (slave): multi-replica sets with failover routing; a fresh
+replica bootstraps by full sync from a healthy peer then streaming catch-up.
+"""
+
+from __future__ import annotations
+
+import os
+import pickle
+import random
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core.ps import MasterShard, SlaveShard
+
+
+@dataclass
+class Checkpoint:
+    version: int
+    created_at: float
+    shard_snaps: dict[int, dict]          # shard_id -> snapshot
+    queue_offsets: dict[int, int]         # partition -> offset at save time
+    num_shards: int
+    metrics: dict = field(default_factory=dict)
+    tier: str = "local"
+
+
+class CheckpointStore:
+    """Two-tier checkpoint storage. The local tier is in-memory (stands in
+    for local disk); the remote tier serializes to files under ``root`` —
+    slower, durable, written at a longer interval (paper §4.2.1b)."""
+
+    def __init__(self, root: Optional[str] = None, keep: int = 8):
+        self.root = root
+        self.keep = keep
+        self._local: dict[int, Checkpoint] = {}
+        self._remote: dict[int, str] = {}
+        if root:
+            os.makedirs(root, exist_ok=True)
+
+    def save(self, ckpt: Checkpoint, tier: str = "local") -> None:
+        ckpt.tier = tier
+        self._local[ckpt.version] = ckpt
+        if tier == "remote" and self.root:
+            path = os.path.join(self.root, f"ckpt_{ckpt.version}.pkl")
+            with open(path, "wb") as f:
+                pickle.dump(ckpt, f, protocol=4)
+            self._remote[ckpt.version] = path
+        # retention
+        while len(self._local) > self.keep:
+            oldest = min(self._local)
+            if oldest in self._remote:
+                self._local.pop(oldest)
+            else:
+                self._local.pop(oldest)
+
+    def load(self, version: int) -> Checkpoint:
+        if version in self._local:
+            return self._local[version]
+        if version in self._remote:
+            with open(self._remote[version], "rb") as f:
+                return pickle.load(f)
+        raise KeyError(f"no checkpoint version {version}")
+
+    def versions(self) -> list[int]:
+        return sorted(set(self._local) | set(self._remote))
+
+    def latest(self) -> Optional[int]:
+        v = self.versions()
+        return v[-1] if v else None
+
+
+@dataclass
+class BackupPolicy:
+    """Per-model fault-tolerance strategy — hot-switchable (§4.2.1c)."""
+
+    local_interval: float = 30.0          # < 1 hour in production
+    remote_interval: float = 3600.0       # hour/day level
+    jitter: float = 0.25                  # random trigger fraction
+    incremental: bool = True              # queue doubles as incremental log
+
+
+class ColdBackup:
+    """Checkpoint scheduler + recovery for the master cluster."""
+
+    def __init__(self, shards: list[MasterShard], store: CheckpointStore,
+                 policy: BackupPolicy, queue=None,
+                 rng: Optional[random.Random] = None):
+        self.shards = shards
+        self.store = store
+        self.policy = policy
+        self.queue = queue
+        self.rng = rng or random.Random(0)
+        self._version = 0
+        self._next_local = self._jittered(0.0, policy.local_interval)
+        self._next_remote = self._jittered(0.0, policy.remote_interval)
+
+    def _jittered(self, now: float, interval: float) -> float:
+        j = 1.0 + self.rng.uniform(-self.policy.jitter, self.policy.jitter)
+        return now + interval * j
+
+    def maybe_checkpoint(self, now: float,
+                         metrics: Optional[dict] = None) -> Optional[int]:
+        tier = None
+        if now >= self._next_remote:
+            tier = "remote"
+            self._next_remote = self._jittered(now,
+                                               self.policy.remote_interval)
+            self._next_local = self._jittered(now, self.policy.local_interval)
+        elif now >= self._next_local:
+            tier = "local"
+            self._next_local = self._jittered(now, self.policy.local_interval)
+        if tier is None:
+            return None
+        return self.checkpoint(now, tier=tier, metrics=metrics)
+
+    def checkpoint(self, now: float, tier: str = "local",
+                   metrics: Optional[dict] = None) -> int:
+        self._version += 1
+        offsets = (self.queue.latest_offsets() if self.queue is not None
+                   else {})
+        ckpt = Checkpoint(
+            version=self._version, created_at=now,
+            shard_snaps={s.shard_id: s.snapshot() for s in self.shards
+                         if s.alive},
+            queue_offsets=offsets,
+            num_shards=len(self.shards),
+            metrics=dict(metrics or {}),
+        )
+        self.store.save(ckpt, tier=tier)
+        return self._version
+
+    # -- recovery ---------------------------------------------------------
+    def recover_shard(self, shard: MasterShard,
+                      version: Optional[int] = None) -> int:
+        """Partial fault tolerance (§4.2.1e): restore ONE shard from the
+        newest checkpoint; the rest of the cluster keeps serving."""
+        v = version if version is not None else self.store.latest()
+        assert v is not None, "no checkpoint available"
+        ckpt = self.store.load(v)
+        shard.clear()
+        snap = ckpt.shard_snaps.get(shard.shard_id)
+        if snap is not None:
+            shard.load_snapshot(snap)
+        shard.alive = True
+        return v
+
+    def recover_all(self, shards: list[MasterShard],
+                    version: Optional[int] = None,
+                    owner_of: Optional[Callable] = None) -> int:
+        """Full recovery with dynamic routing (§4.2.1d): the checkpoint may
+        have been written by a different shard count; ``owner_of(ids)`` maps
+        IDs to the *new* shard layout."""
+        v = version if version is not None else self.store.latest()
+        assert v is not None, "no checkpoint available"
+        ckpt = self.store.load(v)
+        for s in shards:
+            s.clear()
+            s.alive = True
+        if owner_of is None and ckpt.num_shards == len(shards):
+            for s in shards:
+                snap = ckpt.shard_snaps.get(s.shard_id)
+                if snap is not None:
+                    s.load_snapshot(snap)
+            return v
+        assert owner_of is not None, (
+            "shard count changed: recovery needs an owner_of routing fn")
+        for snap in ckpt.shard_snaps.values():
+            for s in shards:
+                sid = s.shard_id
+                s.load_snapshot(
+                    snap, ids_filter=lambda ids, sid=sid:
+                    owner_of(ids) == sid)
+        return v
+
+
+class ReplicaSet:
+    """Hot backup (§4.2.2): multi-replica load balancing over slave shards
+    holding the same shard_id. Stateless LB + stateful replicas, consistency
+    via full-sync + streaming catch-up."""
+
+    def __init__(self, replicas: list[SlaveShard]):
+        assert replicas
+        self.replicas = replicas
+        self._rr = 0
+        self.failovers = 0
+
+    def healthy(self) -> list[SlaveShard]:
+        return [r for r in self.replicas if r.alive]
+
+    def pick(self) -> SlaveShard:
+        """Round-robin over healthy replicas; failover transparently."""
+        h = self.healthy()
+        if not h:
+            raise RuntimeError("all replicas down")
+        r = h[self._rr % len(h)]
+        self._rr += 1
+        return r
+
+    def lookup(self, group: str, ids: np.ndarray) -> np.ndarray:
+        """Serving read with failover retry — the request never fails while
+        any replica lives (zero-downtime claim of §4.2.2)."""
+        for _ in range(len(self.replicas)):
+            r = self.pick()
+            try:
+                return r.lookup(group, ids)
+            except AssertionError:
+                self.failovers += 1
+                continue
+        raise RuntimeError("all replicas down")
+
+    def add_replica(self, shard: SlaveShard) -> SlaveShard:
+        """Bootstrap: full sync from a healthy peer, then the caller
+        attaches a Scatter for streaming catch-up."""
+        peer = self.healthy()[0]
+        shard.full_sync_from(peer)
+        self.replicas.append(shard)
+        return shard

@@ -1,0 +1,41 @@
+"""Feature admission and expiry (paper §4.1 c: "feature filter").
+
+Admission: probabilistic / count-threshold entry so one-off junk features
+never allocate PS rows. Expiry: rows untouched for ``ttl_steps`` are
+deleted — and the deletion is *streamed* to slaves (the sync mechanism must
+support parameter deletion, §4.1c).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass
+class FeatureFilter:
+    min_count: int = 1            # admissions below this never create rows
+    ttl_steps: int = 10_000       # expiry horizon (in master steps)
+    seen: dict = field(default_factory=dict)
+
+    def admit(self, ids: np.ndarray) -> np.ndarray:
+        """Returns the subset of ids admitted for row creation."""
+        if self.min_count <= 1:
+            return ids
+        out = []
+        for rid in np.asarray(ids).tolist():
+            c = self.seen.get(rid, 0) + 1
+            self.seen[rid] = c
+            if c >= self.min_count:
+                out.append(rid)
+        return np.asarray(out, dtype=np.int64)
+
+    def expired(self, table, step: int) -> np.ndarray:
+        """IDs whose last touch is older than ttl_steps."""
+        ids = table.all_ids()
+        if len(ids) == 0:
+            return ids
+        sl = table._lookup(ids)
+        stale = table.last_touch[sl] < (step - self.ttl_steps)
+        return ids[stale]

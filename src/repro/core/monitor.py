@@ -1,0 +1,81 @@
+"""Model metrics monitoring via progressive validation (paper §4.3.1).
+
+The prediction made on each training batch *before* its gradients are
+applied is the evaluation signal: real-time (the data is the live stream)
+and lossless (the same samples still train the model afterwards). Metrics
+are kept as time series with windowed smoothing for the downgrade trigger.
+"""
+
+from __future__ import annotations
+
+import math
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+
+def logloss(y: np.ndarray, p: np.ndarray, eps: float = 1e-7) -> float:
+    p = np.clip(p, eps, 1 - eps)
+    return float(-np.mean(y * np.log(p) + (1 - y) * np.log(1 - p)))
+
+
+def auc(y: np.ndarray, p: np.ndarray) -> float:
+    """Rank-based AUC (ties averaged)."""
+    order = np.argsort(p, kind="mergesort")
+    ranks = np.empty(len(p), dtype=np.float64)
+    ranks[order] = np.arange(1, len(p) + 1)
+    # average ranks for ties
+    sp = p[order]
+    i = 0
+    while i < len(sp):
+        j = i
+        while j + 1 < len(sp) and sp[j + 1] == sp[i]:
+            j += 1
+        if j > i:
+            ranks[order[i:j + 1]] = (i + j + 2) / 2.0
+        i = j + 1
+    n_pos = int(y.sum())
+    n_neg = len(y) - n_pos
+    if n_pos == 0 or n_neg == 0:
+        return 0.5
+    return float((ranks[y == 1].sum() - n_pos * (n_pos + 1) / 2)
+                 / (n_pos * n_neg))
+
+
+@dataclass
+class MetricPoint:
+    t: float
+    step: int
+    values: dict[str, float]
+
+
+class ProgressiveValidator:
+    """Accumulates predict-before-train metrics per batch."""
+
+    def __init__(self, window: int = 50):
+        self.history: list[MetricPoint] = []
+        self.window = window
+
+    def observe(self, t: float, step: int, y: np.ndarray,
+                p: np.ndarray) -> MetricPoint:
+        pt = MetricPoint(t=t, step=step, values={
+            "logloss": logloss(y, p),
+            "auc": auc(y, p),
+            "pctr": float(np.mean(p)),
+            "ctr": float(np.mean(y)),
+        })
+        self.history.append(pt)
+        return pt
+
+    def smoothed(self, metric: str, window: Optional[int] = None) -> float:
+        """Smoothing over the last ``window`` contrast points (§4.3.2a)."""
+        w = window or self.window
+        pts = self.history[-w:]
+        if not pts:
+            return math.nan
+        return float(np.mean([p.values[metric] for p in pts]))
+
+    def latest(self, metric: str) -> float:
+        return self.history[-1].values[metric] if self.history else math.nan

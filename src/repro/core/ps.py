@@ -1,0 +1,338 @@
+"""Parameter-server storage: row-addressable sparse tables (arena-backed)
+and dense banks, composed into master (training) and slave (serving) shards.
+
+Master shards hold *training* state: parameter rows plus optimizer slots
+(FTRL ``z,n``, Adam ``m,v``, ...). Slave shards hold *serving* state only:
+the transformed inference weights — the paper's heterogeneous-parameter
+split (§1.2.1).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.optim import Optimizer
+
+
+class SparseTable:
+    """Row-addressable table over a huge hashed ID space; only touched rows
+    exist. Arena storage: a growable (capacity, dim) array + id→slot map,
+    so batched gather/scatter are vectorized."""
+
+    def __init__(self, dim: int, slot_names: tuple[str, ...] = (),
+                 init_capacity: int = 1024, dtype=np.float32):
+        self.dim = dim
+        self.dtype = dtype
+        self.slot_names = tuple(slot_names)
+        self._slot_of: dict[int, int] = {}
+        self._id_of: list[int] = []
+        self._free: list[int] = []
+        cap = init_capacity
+        self._w = np.zeros((cap, dim), dtype=dtype)
+        self._slots = {n: np.zeros((cap, dim), dtype=np.float32)
+                       for n in self.slot_names}
+        self.last_touch = np.zeros((cap,), dtype=np.int64)
+        self.touch_count = np.zeros((cap,), dtype=np.int64)
+
+    # -- capacity ---------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._slot_of)
+
+    def _grow(self, need: int) -> None:
+        cap = self._w.shape[0]
+        new_cap = max(need, cap * 2)
+        def grow(a):
+            out = np.zeros((new_cap,) + a.shape[1:], dtype=a.dtype)
+            out[:cap] = a
+            return out
+        self._w = grow(self._w)
+        self._slots = {n: grow(a) for n, a in self._slots.items()}
+        self.last_touch = grow(self.last_touch)
+        self.touch_count = grow(self.touch_count)
+
+    def _ensure(self, ids: np.ndarray) -> np.ndarray:
+        """Returns arena slots for ids, creating rows as needed."""
+        slots = np.empty(len(ids), dtype=np.int64)
+        for i, rid in enumerate(ids.tolist()):
+            s = self._slot_of.get(rid)
+            if s is None:
+                if self._free:
+                    s = self._free.pop()
+                else:
+                    s = len(self._id_of)
+                    self._id_of.append(-1)
+                    if s >= self._w.shape[0]:
+                        self._grow(s + 1)
+                    # (slot was appended; arena may already be large enough)
+                self._slot_of[rid] = s
+                if s >= len(self._id_of):
+                    self._id_of.extend([-1] * (s + 1 - len(self._id_of)))
+                self._id_of[s] = rid
+                self._w[s] = 0.0
+                for a in self._slots.values():
+                    a[s] = 0.0
+                self.last_touch[s] = 0
+                self.touch_count[s] = 0
+            slots[i] = s
+        return slots
+
+    def _lookup(self, ids: np.ndarray) -> np.ndarray:
+        """Slots for existing ids; -1 where missing."""
+        return np.array([self._slot_of.get(r, -1) for r in ids.tolist()],
+                        dtype=np.int64)
+
+    # -- access -------------------------------------------------------------
+    def gather(self, ids: np.ndarray, *, create: bool = False):
+        """Returns (w (n,dim), slots dict name->(n,dim)). Missing rows are
+        zeros unless ``create``."""
+        ids = np.asarray(ids, dtype=np.int64)
+        if create:
+            sl = self._ensure(ids)
+            w = self._w[sl].copy()
+            slots = {n: a[sl].copy() for n, a in self._slots.items()}
+        else:
+            sl = self._lookup(ids)
+            ok = sl >= 0
+            w = np.zeros((len(ids), self.dim), dtype=self.dtype)
+            w[ok] = self._w[sl[ok]]
+            slots = {}
+            for n, a in self._slots.items():
+                v = np.zeros((len(ids), self.dim), dtype=np.float32)
+                v[ok] = a[sl[ok]]
+                slots[n] = v
+        return w, slots
+
+    def scatter(self, ids: np.ndarray, w: np.ndarray,
+                slots: Optional[dict] = None, *, step: int = 0) -> None:
+        ids = np.asarray(ids, dtype=np.int64)
+        sl = self._ensure(ids)
+        self._w[sl] = w
+        if slots:
+            for n, v in slots.items():
+                self._slots[n][sl] = v
+        self.last_touch[sl] = step
+        self.touch_count[sl] += 1
+
+    def delete(self, ids: np.ndarray) -> int:
+        ids = np.asarray(ids, dtype=np.int64)
+        n = 0
+        for rid in ids.tolist():
+            s = self._slot_of.pop(rid, None)
+            if s is not None:
+                self._id_of[s] = -1
+                self._free.append(s)
+                n += 1
+        return n
+
+    def all_ids(self) -> np.ndarray:
+        return np.fromiter(self._slot_of.keys(), dtype=np.int64,
+                           count=len(self._slot_of))
+
+    def nbytes(self) -> int:
+        live = len(self)
+        per_row = self._w.itemsize * self.dim * (1 + len(self._slots))
+        return live * per_row
+
+    # -- snapshot (checkpointing) -------------------------------------------
+    def snapshot(self) -> dict:
+        ids = self.all_ids()
+        w, slots = self.gather(ids)
+        sl = self._lookup(ids)
+        return {"ids": ids, "w": w, "slots": slots,
+                "last_touch": self.last_touch[sl].copy(),
+                "touch_count": self.touch_count[sl].copy()}
+
+    @classmethod
+    def restore(cls, snap: dict, dim: int, slot_names: tuple[str, ...],
+                dtype=np.float32) -> "SparseTable":
+        t = cls(dim, slot_names, init_capacity=max(16, len(snap["ids"])),
+                dtype=dtype)
+        t.scatter(snap["ids"], snap["w"], snap["slots"])
+        sl = t._lookup(snap["ids"])
+        t.last_touch[sl] = snap["last_touch"]
+        t.touch_count[sl] = snap["touch_count"]
+        return t
+
+
+@dataclass
+class DenseBank:
+    """Named dense tensors (DNN hidden layers etc.) with version counters."""
+
+    tensors: dict[str, np.ndarray] = field(default_factory=dict)
+    slots: dict[str, dict[str, np.ndarray]] = field(default_factory=dict)
+    versions: dict[str, int] = field(default_factory=dict)
+
+    def put(self, name: str, value: np.ndarray,
+            slots: Optional[dict] = None) -> None:
+        self.tensors[name] = value
+        if slots is not None:
+            self.slots[name] = slots
+        self.versions[name] = self.versions.get(name, 0) + 1
+
+    def snapshot(self) -> dict:
+        return {
+            "tensors": {k: v.copy() for k, v in self.tensors.items()},
+            "slots": {k: {n: a.copy() for n, a in s.items()}
+                      for k, s in self.slots.items()},
+            "versions": dict(self.versions),
+        }
+
+    @classmethod
+    def restore(cls, snap: dict) -> "DenseBank":
+        return cls(tensors=dict(snap["tensors"]),
+                   slots={k: dict(v) for k, v in snap["slots"].items()},
+                   versions=dict(snap["versions"]))
+
+
+class MasterShard:
+    """Training-side PS shard: sparse groups with optimizer slots + a dense
+    bank. Gradient pushes update rows through the optimizer and notify the
+    collector (dirty IDs only — paper §4.1.1)."""
+
+    def __init__(self, shard_id: int, groups: dict[str, int],
+                 optimizer: Optimizer, collector=None):
+        """groups: {group_name: row_dim}"""
+        self.shard_id = shard_id
+        self.optimizer = optimizer
+        self.tables = {
+            g: SparseTable(dim, tuple(sorted(
+                optimizer.init_slots(np.zeros((dim,), np.float32)).keys())))
+            for g, dim in groups.items()
+        }
+        self.dense = DenseBank()
+        self.collector = collector
+        self.step = 0
+        self.alive = True
+
+    def pull(self, group: str, ids: np.ndarray, *, create: bool = True):
+        """Trainer pull: returns current *training* weights for ids."""
+        assert self.alive, f"master shard {self.shard_id} is down"
+        w, _ = self.tables[group].gather(ids, create=create)
+        return w
+
+    def push_grad(self, group: str, ids: np.ndarray, grads: np.ndarray,
+                  *, step: Optional[int] = None) -> None:
+        """Apply gradient rows through the optimizer; record dirty IDs."""
+        assert self.alive, f"master shard {self.shard_id} is down"
+        t = self.tables[group]
+        st = self.step if step is None else step
+        w, slots = t.gather(ids, create=True)
+        import jax.numpy as jnp
+        new_w, new_slots = self.optimizer.update(
+            jnp.asarray(w), {k: jnp.asarray(v) for k, v in slots.items()},
+            jnp.asarray(grads), st)
+        t.scatter(ids, np.asarray(new_w),
+                  {k: np.asarray(v) for k, v in new_slots.items()}, step=st)
+        self.step = st + 1
+        if self.collector is not None:
+            self.collector.record(group, ids, "upsert")
+
+    def push_dense(self, name: str, value: np.ndarray,
+                   slots: Optional[dict] = None) -> None:
+        assert self.alive
+        self.dense.put(name, value, slots)
+        if self.collector is not None:
+            self.collector.record_dense(name)
+
+    def delete_rows(self, group: str, ids: np.ndarray) -> None:
+        """Feature-filter expiry: remove rows and emit delete records."""
+        self.tables[group].delete(ids)
+        if self.collector is not None:
+            self.collector.record(group, ids, "delete")
+
+    # -- fault tolerance ---------------------------------------------------
+    def snapshot(self) -> dict:
+        return {
+            "shard_id": self.shard_id,
+            "step": self.step,
+            "tables": {g: t.snapshot() for g, t in self.tables.items()},
+            "dense": self.dense.snapshot(),
+        }
+
+    def load_snapshot(self, snap: dict, *, ids_filter=None) -> None:
+        self.step = snap["step"]
+        for g, tsnap in snap["tables"].items():
+            t = self.tables[g]
+            ids, w, slots = tsnap["ids"], tsnap["w"], tsnap["slots"]
+            if ids_filter is not None:
+                keep = ids_filter(ids)
+                ids, w = ids[keep], w[keep]
+                slots = {k: v[keep] for k, v in slots.items()}
+            t.scatter(ids, w, slots)
+
+    def kill(self) -> None:
+        self.alive = False
+
+    def clear(self) -> None:
+        for g, t in list(self.tables.items()):
+            self.tables[g] = SparseTable(t.dim, t.slot_names, dtype=t.dtype)
+        self.dense = DenseBank()
+
+
+class SlaveShard:
+    """Serving-side PS shard: inference weights only, idempotent versioned
+    application of stream records (last-writer-wins by ``seq``)."""
+
+    def __init__(self, shard_id: int, groups: dict[str, int]):
+        self.shard_id = shard_id
+        self.tables = {g: SparseTable(dim) for g, dim in groups.items()}
+        self.dense: dict[str, np.ndarray] = {}
+        self.dense_versions: dict[str, int] = {}
+        # (group, producer) -> last applied seq, for LWW idempotence
+        self._applied_seq: dict[tuple[str, int], int] = {}
+        self.alive = True
+        self.applied_records = 0
+        self.skipped_records = 0
+
+    def apply(self, record) -> bool:
+        """Apply one stream record; returns False if skipped (stale)."""
+        assert self.alive, f"slave shard {self.shard_id} is down"
+        key = (record.group, record.producer)
+        last = self._applied_seq.get(key, -1)
+        # strictly-older records are stale (LWW). Equal-seq records are
+        # sibling chunks of the SAME flush covering disjoint IDs (or exact
+        # redeliveries, which are idempotent full-value upserts) — apply.
+        if record.seq < last:
+            self.skipped_records += 1
+            return False
+        from repro.core.transform import decode_record
+        if record.group.startswith("dense/"):
+            name = record.group[len("dense/"):]
+            ver = int(record.ids[0])
+            if self.dense_versions.get(name, -1) < ver:
+                self.dense[name] = decode_record(record)
+                self.dense_versions[name] = ver
+        elif record.op == "delete":
+            self.tables[record.group].delete(record.ids)
+        else:
+            values = decode_record(record)
+            self.tables[record.group].scatter(record.ids, values)
+        self._applied_seq[key] = max(last, record.seq)
+        self.applied_records += 1
+        return True
+
+    def lookup(self, group: str, ids: np.ndarray) -> np.ndarray:
+        """Latency-path query: serve weights (missing rows -> zeros)."""
+        assert self.alive, f"slave shard {self.shard_id} is down"
+        w, _ = self.tables[group].gather(ids, create=False)
+        return w
+
+    # -- hot backup ----------------------------------------------------------
+    def full_sync_from(self, other: "SlaveShard") -> None:
+        """Bootstrap a fresh replica: full copy then streaming catch-up."""
+        for g, t in other.tables.items():
+            snap = t.snapshot()
+            self.tables[g] = SparseTable.restore(
+                snap, t.dim, (), dtype=t.dtype)
+        self.dense = {k: v.copy() for k, v in other.dense.items()}
+        self.dense_versions = dict(other.dense_versions)
+        self._applied_seq = dict(other._applied_seq)
+
+    def kill(self) -> None:
+        self.alive = False
+
+    def revive(self) -> None:
+        self.alive = True

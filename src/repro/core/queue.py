@@ -1,0 +1,124 @@
+"""Partitioned durable log — the framework's stand-in for the paper's
+external Kafka queue between master and slave parameter servers.
+
+Semantics kept faithful to what the paper relies on:
+  * per-partition append ordering;
+  * consumer-managed offsets (so a checkpointed offset can replay);
+  * at-least-once delivery (consumers may re-read; records are idempotent
+    because WeiPS pushes full current values per ID, last-writer-wins by
+    ``seq``);
+  * partition-selective consumption (a slave subscribes only to its
+    partitions — paper §4.1.4).
+
+On a real deployment this interface fronts a Kafka client; everything above
+it (gather/push/scatter, fault tolerance, downgrade) is transport-agnostic.
+"""
+
+from __future__ import annotations
+
+import pickle
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Iterable, Optional
+
+import numpy as np
+
+
+@dataclass
+class Record:
+    """One sync message: full current values for a set of IDs of one group.
+
+    ``seq`` is a per-(producer shard, group) monotonic version used for
+    last-writer-wins idempotent application on the slave. ``op`` is
+    "upsert" or "delete" (feature-filter expiry produces deletes).
+    """
+
+    group: str
+    op: str
+    ids: np.ndarray                  # (n,) int64 row/expert/tensor ids
+    payload: Any                     # transformed values (see transform.py)
+    seq: int
+    producer: int                    # master shard id
+    meta: dict = field(default_factory=dict)
+
+    def nbytes(self) -> int:
+        """Wire size estimate (bandwidth accounting for benchmarks)."""
+        try:
+            pay = len(pickle.dumps(self.payload, protocol=4))
+        except Exception:
+            pay = 0
+        return int(self.ids.nbytes + pay + 64)
+
+
+class PartitionedQueue:
+    """In-memory partitioned log with per-partition offsets."""
+
+    def __init__(self, num_partitions: int):
+        assert num_partitions >= 1
+        self.num_partitions = num_partitions
+        self._logs: list[list[Record]] = [[] for _ in range(num_partitions)]
+        self._lock = threading.Lock()
+        self.produced_bytes = 0
+        self.produced_records = 0
+
+    # -- producer side ---------------------------------------------------
+    def produce(self, partition: int, record: Record) -> int:
+        """Appends; returns the offset of the new record."""
+        with self._lock:
+            log = self._logs[partition]
+            log.append(record)
+            self.produced_bytes += record.nbytes()
+            self.produced_records += 1
+            return len(log) - 1
+
+    # -- consumer side ----------------------------------------------------
+    def consume(self, partition: int, offset: int,
+                max_records: Optional[int] = None) -> tuple[list[Record], int]:
+        """Reads records from ``offset``; returns (records, next_offset)."""
+        log = self._logs[partition]
+        end = len(log)
+        if max_records is not None:
+            end = min(end, offset + max_records)
+        return log[offset:end], end
+
+    def latest_offset(self, partition: int) -> int:
+        return len(self._logs[partition])
+
+    def latest_offsets(self) -> dict[int, int]:
+        return {p: len(log) for p, log in enumerate(self._logs)}
+
+    def truncate_before(self, partition: int, offset: int) -> None:
+        """Retention: drop records below offset (offsets stay absolute)."""
+        # Keep absolute offsets simple for this simulation: mark, don't free.
+        del partition, offset
+
+
+class Consumer:
+    """Offset-tracking consumer over a subset of partitions."""
+
+    def __init__(self, queue: PartitionedQueue, partitions: Iterable[int],
+                 offsets: Optional[dict[int, int]] = None):
+        self.queue = queue
+        self.partitions = sorted(set(partitions))
+        self.offsets = {p: 0 for p in self.partitions}
+        if offsets:
+            self.offsets.update({p: offsets[p] for p in self.partitions
+                                 if p in offsets})
+
+    def poll(self, max_records: Optional[int] = None) -> list[Record]:
+        out: list[Record] = []
+        for p in self.partitions:
+            recs, nxt = self.queue.consume(p, self.offsets[p], max_records)
+            out.extend(recs)
+            self.offsets[p] = nxt
+        return out
+
+    def lag(self) -> int:
+        return sum(self.queue.latest_offset(p) - self.offsets[p]
+                   for p in self.partitions)
+
+    def seek(self, offsets: dict[int, int]) -> None:
+        """Rewind/forward to recorded offsets (checkpoint replay)."""
+        for p in self.partitions:
+            if p in offsets:
+                self.offsets[p] = offsets[p]

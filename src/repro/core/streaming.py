@@ -1,0 +1,280 @@
+"""Streaming synchronization (paper §4.1): collect → gather → push → scatter.
+
+  Collector  — per master shard; captures dirty IDs + op type only (no
+               values, no increments) into a lock-free-queue stand-in.
+  Gatherer   — deduplicating aggregation window with the paper's three
+               trigger modes: real-time, threshold-based, period-based.
+               Dedup ratio is tracked (the paper observes ≥90 % repetition
+               of updates within 10 s — benchmarks/sync_bench.py reproduces
+               this with Zipfian update streams).
+  Pusher     — reads *current full values* for the gathered IDs (eventual
+               consistency at ID granularity: never increments), applies the
+               model transform (FTRL z,n→w, dtype cast, int8 quant),
+               serializes, and produces to the ID-routed queue partition.
+  Scatter    — per slave shard; consumes its partitions and applies records
+               idempotently (LWW by seq).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.core.ps import MasterShard, SlaveShard
+from repro.core.queue import Consumer, PartitionedQueue, Record
+from repro.core.routing import RoutingPlan
+from repro.core.transform import Transform
+
+
+class Collector:
+    """Dirty-ID capture. The paper's lock-free multi-producer queue guards
+    multi-threaded trainers; in the SPMD/JAX adaptation collection happens
+    post-step on device-computed unique IDs, so a list suffices — the
+    *semantics* kept are: IDs + op only, never values (§4.1.1)."""
+
+    def __init__(self):
+        self._events: list[tuple[str, np.ndarray, str]] = []
+        self.collected_ids = 0
+
+    def record(self, group: str, ids: np.ndarray, op: str = "upsert") -> None:
+        ids = np.asarray(ids, dtype=np.int64)
+        self._events.append((group, ids, op))
+        self.collected_ids += len(ids)
+
+    def record_dense(self, name: str) -> None:
+        self._events.append((f"dense/{name}", np.zeros(1, np.int64), "upsert"))
+
+    def drain(self) -> list[tuple[str, np.ndarray, str]]:
+        out, self._events = self._events, []
+        return out
+
+
+@dataclass
+class GatherStats:
+    raw_ids: int = 0          # ids entering the window (with repetition)
+    pushed_ids: int = 0       # unique ids actually pushed
+    flushes: int = 0
+
+    @property
+    def dedup_ratio(self) -> float:
+        """Fraction of raw updates absorbed by deduplication."""
+        if self.raw_ids == 0:
+            return 0.0
+        return 1.0 - self.pushed_ids / self.raw_ids
+
+
+class Gatherer:
+    """Aggregation window with the three trigger modes (§4.1.2)."""
+
+    def __init__(self, mode: str = "period", *, threshold: int = 4096,
+                 period: float = 1.0):
+        assert mode in ("realtime", "threshold", "period")
+        self.mode = mode
+        self.threshold = threshold
+        self.period = period
+        self._pending: dict[tuple[str, str], set[int]] = {}
+        self._pending_count = 0
+        self._last_flush = 0.0
+        self.stats = GatherStats()
+
+    def offer(self, events: list[tuple[str, np.ndarray, str]]) -> None:
+        for group, ids, op in events:
+            key = (group, op)
+            s = self._pending.setdefault(key, set())
+            before = len(s)
+            s.update(ids.tolist())
+            self.stats.raw_ids += len(ids)
+            self._pending_count += len(s) - before
+
+    def ready(self, now: float) -> bool:
+        if self._pending_count == 0 and not self._pending:
+            return False
+        if self.mode == "realtime":
+            return True
+        if self.mode == "threshold":
+            return self._pending_count >= self.threshold
+        return (now - self._last_flush) >= self.period
+
+    def flush(self, now: float) -> dict[tuple[str, str], np.ndarray]:
+        out = {k: np.fromiter(v, dtype=np.int64, count=len(v))
+               for k, v in self._pending.items() if v}
+        self._pending = {}
+        self._pending_count = 0
+        self._last_flush = now
+        self.stats.pushed_ids += sum(len(v) for v in out.values())
+        self.stats.flushes += 1
+        return out
+
+
+class Pusher:
+    """Master-side: full-current-value reads + transform + partitioned
+    produce. ``seq`` is per (group, producer) monotonic."""
+
+    def __init__(self, shard: MasterShard, queue: PartitionedQueue,
+                 plan: RoutingPlan, transform: Transform,
+                 max_ids_per_record: int = 65536):
+        self.shard = shard
+        self.queue = queue
+        self.plan = plan
+        self.transform = transform
+        self.max_ids_per_record = max_ids_per_record
+        self._seq: dict[str, int] = {}
+        self.pushed_bytes = 0
+        self.pushed_records = 0
+
+    def _next_seq(self, group: str) -> int:
+        s = self._seq.get(group, -1) + 1
+        self._seq[group] = s
+        return s
+
+    def push(self, gathered: dict[tuple[str, str], np.ndarray],
+             now: float = 0.0) -> int:
+        """Returns number of records produced."""
+        n_rec = 0
+        for (group, op), ids in gathered.items():
+            if group.startswith("dense/"):
+                name = group[len("dense/"):]
+                value = self.shard.dense.tensors.get(name)
+                if value is None:
+                    continue
+                ver = self.shard.dense.versions[name]
+                payload = self.transform.encode(
+                    value.reshape(1, -1),
+                    self.shard.dense.slots.get(name, {}))
+                rec = Record(group=group, op="upsert",
+                             ids=np.array([ver], np.int64), payload=payload,
+                             seq=self._next_seq(group),
+                             producer=self.shard.shard_id,
+                             meta={"codec": self.transform.name, "t": now,
+                                   "shape": value.shape})
+                part = int(ver) % self.queue.num_partitions
+                # dense tensors go to every slave: replicate to one
+                # partition per slave shard
+                for slave in range(self.plan.num_slave):
+                    p = self.plan.partitions_for_slave(slave)[0]
+                    self.queue.produce(p, rec)
+                    self.pushed_bytes += rec.nbytes()
+                    n_rec += 1
+                continue
+
+            table = self.shard.tables[group]
+            seq = self._next_seq(group)
+            by_part = self.plan.split_by_partition(ids)
+            for part, part_ids in by_part.items():
+                for i in range(0, len(part_ids), self.max_ids_per_record):
+                    chunk = part_ids[i:i + self.max_ids_per_record]
+                    if op == "delete":
+                        payload = {}
+                    else:
+                        w, slots = table.gather(chunk)
+                        payload = self.transform.encode(w, slots)
+                    rec = Record(group=group, op=op, ids=chunk,
+                                 payload=payload, seq=seq,
+                                 producer=self.shard.shard_id,
+                                 meta={"codec": self.transform.name, "t": now})
+                    self.queue.produce(int(part), rec)
+                    self.pushed_bytes += rec.nbytes()
+                    n_rec += 1
+        self.pushed_records += n_rec
+        return n_rec
+
+
+class Scatter:
+    """Slave-side consumer: poll partitions, apply idempotently."""
+
+    def __init__(self, shard: SlaveShard, queue: PartitionedQueue,
+                 plan: RoutingPlan,
+                 offsets: Optional[dict[int, int]] = None):
+        self.shard = shard
+        self.plan = plan
+        self.consumer = Consumer(queue, plan.partitions_for_slave(
+            shard.shard_id), offsets)
+        self.applied = 0
+        self.last_record_time = 0.0
+
+    def poll(self, max_records: Optional[int] = None) -> int:
+        n = 0
+        for rec in self.consumer.poll(max_records):
+            # model routing: keep only ids owned by this slave shard — with
+            # num_partitions % num_slave == 0 this filter is a no-op for
+            # sparse groups (partition congruence), but guards dense
+            # broadcast records and future re-partitioning.
+            if not rec.group.startswith("dense/"):
+                owner = self.plan.slave_shard(rec.ids)
+                keep = owner == self.shard.shard_id
+                if not keep.all():
+                    rec = Record(group=rec.group, op=rec.op,
+                                 ids=rec.ids[keep],
+                                 payload=_filter_payload(rec.payload, keep),
+                                 seq=rec.seq, producer=rec.producer,
+                                 meta=rec.meta)
+            if self.shard.apply(rec):
+                n += 1
+                self.last_record_time = rec.meta.get("t", 0.0)
+        self.applied += n
+        return n
+
+    def offsets(self) -> dict[int, int]:
+        return dict(self.consumer.offsets)
+
+
+def _filter_payload(payload: dict, keep: np.ndarray) -> dict:
+    out = {}
+    for k, v in payload.items():
+        v = np.asarray(v)
+        out[k] = v[keep] if v.ndim >= 1 and v.shape[0] == len(keep) else v
+    return out
+
+
+@dataclass
+class SyncMetrics:
+    sync_lag_seconds: float = 0.0
+    records_in_flight: int = 0
+    dedup_ratio: float = 0.0
+    pushed_bytes: int = 0
+
+
+class SyncPipeline:
+    """Wires one master shard's collect→gather→push and all slave scatters.
+
+    ``tick(now)`` advances the pipeline; with mode="realtime" every tick
+    flushes, with "period" flushes happen every ``period`` sim-seconds —
+    this is what the sync-latency benchmark sweeps."""
+
+    def __init__(self, master: MasterShard, slaves: list[SlaveShard],
+                 queue: PartitionedQueue, plan: RoutingPlan,
+                 transform: Transform, gather_mode: str = "realtime",
+                 threshold: int = 4096, period: float = 1.0):
+        self.collector = Collector()
+        master.collector = self.collector
+        self.master = master
+        self.gatherer = Gatherer(gather_mode, threshold=threshold,
+                                 period=period)
+        self.pusher = Pusher(master, queue, plan, transform)
+        self.scatters = [Scatter(s, queue, plan) for s in slaves]
+        self.queue = queue
+
+    def tick(self, now: float, *, scatter: bool = True) -> int:
+        """collect+gather+maybe-push, then slave polls. Returns #records."""
+        self.gatherer.offer(self.collector.drain())
+        n = 0
+        if self.gatherer.ready(now):
+            n = self.pusher.push(self.gatherer.flush(now), now)
+        if scatter:
+            for sc in self.scatters:
+                if sc.shard.alive:
+                    sc.poll()
+        return n
+
+    def metrics(self, now: float) -> SyncMetrics:
+        lag = max((now - sc.last_record_time) for sc in self.scatters) \
+            if self.scatters else 0.0
+        return SyncMetrics(
+            sync_lag_seconds=lag,
+            records_in_flight=sum(sc.consumer.lag() for sc in self.scatters),
+            dedup_ratio=self.gatherer.stats.dedup_ratio,
+            pushed_bytes=self.pusher.pushed_bytes,
+        )

@@ -1,0 +1,5 @@
+from repro.data.joiner import ExposureEvent, FeedbackEvent, SampleJoiner
+from repro.data.streams import ClickStream, lm_batches
+
+__all__ = ["ExposureEvent", "FeedbackEvent", "SampleJoiner", "ClickStream",
+           "lm_batches"]

@@ -1,0 +1,80 @@
+"""Real-time multi-stream sample joining (paper §1.1a / §1.2: the Flink
+stage). Exposure events (impressions, carrying feature IDs) wait in a time
+window for matching feedback events (clicks); on window expiry the joined
+labeled sample is emitted — positive if feedback arrived, negative
+otherwise. The window length is the paper's model-effect vs. timeliness
+trade-off, swept by the data benchmark.
+"""
+
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Iterator, Optional
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ExposureEvent:
+    t: float
+    view_id: int
+    feature_ids: tuple[int, ...]
+
+
+@dataclass(frozen=True)
+class FeedbackEvent:
+    t: float
+    view_id: int
+    label: float = 1.0
+
+
+@dataclass
+class JoinedSample:
+    t_emit: float
+    view_id: int
+    feature_ids: np.ndarray
+    label: float
+    join_delay: float      # emit time - exposure time (timeliness metric)
+
+
+class SampleJoiner:
+    """Event-time window join over exposure + feedback streams."""
+
+    def __init__(self, window: float = 30.0):
+        self.window = window
+        self._pending: dict[int, ExposureEvent] = {}
+        self._labels: dict[int, float] = {}
+        self._expiry: list[tuple[float, int]] = []    # heap (deadline, view)
+        self.late_feedback = 0                        # feedback after emit
+        self.emitted = 0
+
+    def offer_exposure(self, ev: ExposureEvent) -> None:
+        self._pending[ev.view_id] = ev
+        heapq.heappush(self._expiry, (ev.t + self.window, ev.view_id))
+
+    def offer_feedback(self, ev: FeedbackEvent) -> None:
+        if ev.view_id in self._pending:
+            self._labels[ev.view_id] = ev.label
+        else:
+            self.late_feedback += 1
+
+    def drain(self, now: float) -> list[JoinedSample]:
+        """Emit every exposure whose window has closed."""
+        out: list[JoinedSample] = []
+        while self._expiry and self._expiry[0][0] <= now:
+            deadline, vid = heapq.heappop(self._expiry)
+            ev = self._pending.pop(vid, None)
+            if ev is None:
+                continue
+            label = self._labels.pop(vid, 0.0)
+            out.append(JoinedSample(
+                t_emit=now, view_id=vid,
+                feature_ids=np.asarray(ev.feature_ids, dtype=np.int64),
+                label=label, join_delay=now - ev.t))
+            self.emitted += 1
+        return out
+
+    @property
+    def in_flight(self) -> int:
+        return len(self._pending)

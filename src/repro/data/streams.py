@@ -1,0 +1,95 @@
+"""Synthetic stream generators.
+
+ClickStream drives the online-learning path: Zipfian feature IDs (the
+skew behind the paper's >=90 % update-repetition observation), a drifting
+logistic ground truth (so domino-downgrade triggers are testable by
+injecting distribution shifts), and exposure->feedback delays for the
+joiner. ``lm_batches`` packs token streams for LM training examples.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Iterator, Optional
+
+import numpy as np
+
+from repro.data.joiner import ExposureEvent, FeedbackEvent
+
+
+@dataclass
+class ClickStream:
+    feature_space: int = 1 << 16
+    fields: int = 16
+    zipf_a: float = 1.3
+    feedback_delay: float = 5.0
+    drift_scale: float = 0.0          # ground-truth drift per emitted batch
+    signal_scale: float = 0.4         # |true_w| magnitude (task separability)
+    seed: int = 0
+
+    def __post_init__(self):
+        self.rng = np.random.default_rng(self.seed)
+        self._true_w = self.rng.normal(
+            size=self.feature_space) * self.signal_scale
+        self._view = 0
+
+    def corrupt(self, scale: float = 3.0) -> None:
+        """Adversarial distribution shift: the ground truth flips sign (and
+        sharpens), so everything the model has learned predicts confidently
+        *wrong* — the metric collapse the domino downgrade must catch."""
+        self._true_w = -self._true_w * scale
+
+    def features(self, n: int) -> np.ndarray:
+        ids = self.rng.zipf(self.zipf_a, size=(n, self.fields))
+        return (ids % self.feature_space).astype(np.int64)
+
+    def labels(self, ids: np.ndarray) -> np.ndarray:
+        logits = self._true_w[ids].sum(axis=1)
+        return (self.rng.random(len(ids)) <
+                1.0 / (1.0 + np.exp(-logits))).astype(np.float32)
+
+    def batch(self, n: int) -> tuple[np.ndarray, np.ndarray]:
+        if self.drift_scale:
+            self._true_w += self.rng.normal(
+                size=self.feature_space) * self.drift_scale
+        ids = self.features(n)
+        return ids, self.labels(ids)
+
+    def events(self, n: int, t: float) -> tuple[list[ExposureEvent],
+                                                list[FeedbackEvent]]:
+        """Exposure events at time t; feedback (for positives) delayed."""
+        ids, y = self.batch(n)
+        exposures, feedbacks = [], []
+        for i in range(n):
+            vid = self._view
+            self._view += 1
+            exposures.append(ExposureEvent(
+                t=t, view_id=vid, feature_ids=tuple(ids[i].tolist())))
+            if y[i] > 0:
+                delay = self.rng.exponential(self.feedback_delay)
+                feedbacks.append(FeedbackEvent(t=t + delay, view_id=vid))
+        return exposures, feedbacks
+
+
+def lm_batches(vocab_size: int, batch: int, seq_len: int, *,
+               seed: int = 0, structured: bool = True) -> Iterator[np.ndarray]:
+    """Endless packed token batches. ``structured`` mixes a Markov-ish
+    bigram pattern into the stream so training loss visibly decreases."""
+    rng = np.random.default_rng(seed)
+    if structured:
+        # sparse bigram table: each token has a few likely successors
+        succ = rng.integers(0, vocab_size, size=(vocab_size, 4))
+    while True:
+        if structured:
+            out = np.empty((batch, seq_len), dtype=np.int32)
+            tok = rng.integers(0, vocab_size, size=batch)
+            for t in range(seq_len):
+                out[:, t] = tok
+                follow = succ[tok, rng.integers(0, 4, size=batch)]
+                rand = rng.integers(0, vocab_size, size=batch)
+                use_follow = rng.random(batch) < 0.8
+                tok = np.where(use_follow, follow, rand)
+            yield out
+        else:
+            yield rng.integers(0, vocab_size, size=(batch, seq_len),
+                               dtype=np.int32)

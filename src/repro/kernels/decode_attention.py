@@ -1,0 +1,101 @@
+"""Flash-decode: single-token GQA attention against a long KV cache — the
+latency-critical slave/serving path (decode_32k / long_500k shapes).
+
+Grid (batch, kv_head, kv_block), kv_block innermost; all m query heads of
+one KV group ride in a single (m, d) VMEM tile, so the kernel is one
+(m x d) x (d x block_k) matmul + online-softmax per block — the TPU
+adaptation of GPU flash-decode (no warp reductions; the sequential grid
+revisit IS the reduction). Valid-length masking handles ragged caches.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
+                   acc_scr, *, scale: float, block_k: int):
+    b = pl.program_id(0)
+    kb = pl.program_id(2)
+    n_kb = pl.num_programs(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[b]
+
+    @pl.when(kb * block_k < length)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (m, d)
+        k = k_ref[0, :, 0].astype(jnp.float32)               # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        pos = kb * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        s = jnp.where(pos < length, s, _NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1, keepdims=True)
+        m_scr[...] = m_new
+        v = v_ref[0, :, 0].astype(jnp.float32)               # (bk, d)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(kb == n_kb - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     lengths: jax.Array, *, block_k: int = 512,
+                     interpret: bool = False):
+    """q (B, H, D) one token per sequence; k, v (B, S, G, D); lengths (B,)
+    valid prefix lengths. Returns (B, H, D). S % block_k == 0."""
+    b, h, d = q.shape
+    s, g = k.shape[1], k.shape[2]
+    assert h % g == 0 and s % block_k == 0
+    m = h // g
+    qg = q.reshape(b, g, m, d)
+    grid = (b, g, s // block_k)
+    kernel = functools.partial(_decode_kernel, scale=d ** -0.5,
+                               block_k=block_k)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, m, d),
+                             lambda b_, g_, kb, len_ref: (b_, g_, 0, 0)),
+                pl.BlockSpec((1, block_k, 1, d),
+                             lambda b_, g_, kb, len_ref: (b_, kb, g_, 0)),
+                pl.BlockSpec((1, block_k, 1, d),
+                             lambda b_, g_, kb, len_ref: (b_, kb, g_, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, m, d),
+                                   lambda b_, g_, kb, len_ref:
+                                   (b_, g_, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((m, 1), jnp.float32),
+                pltpu.VMEM((m, 1), jnp.float32),
+                pltpu.VMEM((m, d), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, g, m, d), q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), qg, k, v)
+    return out.reshape(b, h, d)

@@ -1,0 +1,96 @@
+"""Pallas TPU kernels for the PS sparse row paths: embedding row gather
+(slave lookup — the latency-critical serving path) and gradient row
+scatter-add (master update path).
+
+TPU adaptation: the gather is a scalar-prefetch-driven DMA pipeline — row
+IDs are prefetched to SMEM, each grid step's BlockSpec index_map picks the
+HBM row block to stream into VMEM. No gather instruction needed; the block
+pipeline IS the gather (this is the idiomatic TPU embedding kernel, vs. the
+GPU warp-per-row formulation).
+
+Scatter-add relies on the TPU grid being sequential: revisiting the same
+output row accumulates without races (on GPU this would need atomics).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_kernel(ids_ref, table_block, out_block):
+    # table_block: (block_rows, D) rows selected by index_map via ids
+    out_block[...] = table_block[...]
+
+
+def embedding_lookup(table: jax.Array, ids: jax.Array, *,
+                     interpret: bool = False) -> jax.Array:
+    """table (V, D) any float dtype; ids (N,) int32 -> (N, D)."""
+    n = ids.shape[0]
+    v, d = table.shape
+    grid = (n,)
+    gspec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, d), lambda i, ids_ref: (ids_ref[i], 0))],
+        out_specs=pl.BlockSpec((1, d), lambda i, ids_ref: (i, 0)),
+    )
+    return pl.pallas_call(
+        _gather_kernel,
+        grid_spec=gspec,
+        out_shape=jax.ShapeDtypeStruct((n, d), table.dtype),
+        interpret=interpret,
+    )(ids.astype(jnp.int32), table)
+
+
+def _scatter_add_kernel(ids_ref, upd_block, table_in, table_out):
+    """Requires ids SORTED (wrapper sorts): repeated IDs occupy consecutive
+    grid steps, so the out block stays VMEM-resident and `+=` accumulates;
+    the first visit of a row initializes it from the aliased table."""
+    i = pl.program_id(0)
+    prev = ids_ref[jnp.maximum(i - 1, 0)]
+    is_first = jnp.logical_or(i == 0, ids_ref[i] != prev)
+
+    @pl.when(is_first)
+    def _init():
+        table_out[...] = table_in[...] + upd_block[...].astype(
+            table_in.dtype)
+
+    @pl.when(jnp.logical_not(is_first))
+    def _accum():
+        table_out[...] += upd_block[...].astype(table_out.dtype)
+
+
+def embedding_scatter_add(table: jax.Array, ids: jax.Array,
+                          updates: jax.Array, *,
+                          interpret: bool = False) -> jax.Array:
+    """table (V, D); ids (N,); updates (N, D) -> new table with rows +=.
+
+    The table is aliased in/out (in-place on device). IDs are sorted here
+    so repeated IDs land on consecutive grid steps (see kernel docstring).
+    """
+    order = jnp.argsort(ids)
+    ids = ids[order]
+    updates = updates[order]
+    n = ids.shape[0]
+    v, d = table.shape
+    gspec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, ids_ref: (i, 0)),          # updates
+            pl.BlockSpec((1, d), lambda i, ids_ref: (ids_ref[i], 0)),  # table
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i, ids_ref: (ids_ref[i], 0)),
+    )
+    return pl.pallas_call(
+        _scatter_add_kernel,
+        grid_spec=gspec,
+        out_shape=jax.ShapeDtypeStruct((v, d), table.dtype),
+        input_output_aliases={2: 0},      # alias table (ids=0, upd=1) -> out
+        interpret=interpret,
+    )(ids.astype(jnp.int32), updates, table)

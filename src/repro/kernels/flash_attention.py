@@ -1,0 +1,104 @@
+"""Blocked online-softmax causal GQA attention (prefill/train plane).
+
+TPU formulation: grid (batch, q_head, q_block, kv_block) with the kv_block
+axis innermost — VMEM scratch (m, l, acc) persists across the sequential
+kv sweep for one q block (the revisiting-grid pattern, not a GPU
+warp-specialized kernel). Causal skipping via pl.when on whole blocks:
+strictly-upper blocks do no work, the diagonal block masks elementwise.
+Block shapes default to (128, head_dim) — MXU-aligned (multiples of 128 on
+the matmul dims, head_dim is lane-major).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, block_q: int, block_k: int, causal: bool):
+    qb = pl.program_id(2)
+    kb = pl.program_id(3)
+    n_kb = pl.num_programs(3)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale        # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)                # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if causal:
+            q_pos = qb * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            k_pos = kb * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(q_pos >= k_pos, s, _NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1, keepdims=True)
+        m_scr[...] = m_new
+        v = v_ref[0, 0].astype(jnp.float32)                # (bk, d)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    if causal:
+        # whole-block causal skip: only run blocks on/below the diagonal
+        pl.when((qb + 1) * block_q > kb * block_k)(_compute)
+    else:
+        _compute()
+
+    @pl.when(kb == n_kb - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False):
+    """q (B, H, S, D); k, v (B, G, T, D), H = G·m (GQA). Returns (B,H,S,D).
+
+    S and T must be multiples of the block sizes (callers pad)."""
+    b, h, s, d = q.shape
+    g, t = k.shape[1], k.shape[2]
+    assert h % g == 0 and s % block_q == 0 and t % block_k == 0
+    grid = (b, h, s // block_q, t // block_k)
+    kernel = functools.partial(_flash_kernel, scale=d ** -0.5,
+                               block_q=block_q, block_k=block_k,
+                               causal=causal)
+    m_per_g = h // g
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda b_, h_, qb, kb: (b_, h_, qb, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, h_, qb, kb: (b_, h_ // m_per_g, kb, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, h_, qb, kb: (b_, h_ // m_per_g, kb, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda b_, h_, qb, kb: (b_, h_, qb, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

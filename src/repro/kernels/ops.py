@@ -1,0 +1,62 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) kernels execute in interpret mode — the kernel body
+runs in Python for correctness validation; on TPU the same calls compile to
+Mosaic. ``interpret`` resolves automatically from the backend.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decode_attention as _da
+from repro.kernels import delta_codec as _dc
+from repro.kernels import embedding_lookup as _el
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ftrl_row_update as _ftrl
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=())
+def embedding_lookup(table, ids):
+    return _el.embedding_lookup(table, ids, interpret=_interpret())
+
+
+@jax.jit
+def embedding_scatter_add(table, ids, updates):
+    return _el.embedding_scatter_add(table, ids, updates,
+                                     interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "beta", "l1", "l2"))
+def ftrl_row_update(z, n, g, *, alpha=0.05, beta=1.0, l1=1.0, l2=1.0):
+    return _ftrl.ftrl_row_update(z, n, g, alpha=alpha, beta=beta, l1=l1,
+                                 l2=l2, interpret=_interpret())
+
+
+@jax.jit
+def quantize_rows(x):
+    return _dc.quantize_rows(x, interpret=_interpret())
+
+
+@jax.jit
+def dequantize_rows(q, scale):
+    return _dc.dequantize_rows(q, scale, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal=True, block_q=128, block_k=128):
+    return _fa.flash_attention(q, k, v, causal=causal, block_q=block_q,
+                               block_k=block_k, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("block_k",))
+def decode_attention(q, k, v, lengths, *, block_k=512):
+    return _da.decode_attention(q, k, v, lengths, block_k=block_k,
+                                interpret=_interpret())

@@ -1,0 +1,80 @@
+"""Pure-jnp oracles for every Pallas kernel — the ground truth the sweep
+tests assert against (interpret-mode kernels must match these)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_lookup(table: jax.Array, ids: jax.Array) -> jax.Array:
+    """table (V, D); ids (N,) -> (N, D)."""
+    return table[ids]
+
+
+def embedding_scatter_add(table: jax.Array, ids: jax.Array,
+                          updates: jax.Array) -> jax.Array:
+    """table (V, D); ids (N,); updates (N, D) -> (V, D) with += rows."""
+    return table.at[ids].add(updates.astype(table.dtype))
+
+
+def ftrl_row_update(z, n, g, *, alpha: float, beta: float, l1: float,
+                    l2: float):
+    """FTRL-proximal row update. All inputs (B, D) fp32.
+    Returns (z_new, n_new, w_new)."""
+    w = jnp.where(jnp.abs(z) > l1,
+                  (jnp.sign(z) * l1 - z) / ((beta + jnp.sqrt(n)) / alpha + l2),
+                  0.0)
+    n_new = n + g * g
+    sigma = (jnp.sqrt(n_new) - jnp.sqrt(n)) / alpha
+    z_new = z + g - sigma * w
+    w_new = jnp.where(jnp.abs(z_new) > l1,
+                      (jnp.sign(z_new) * l1 - z_new)
+                      / ((beta + jnp.sqrt(n_new)) / alpha + l2),
+                      0.0)
+    return z_new, n_new, w_new
+
+
+def quantize_rows(x: jax.Array):
+    """Row-wise absmax int8: x (B, D) -> (q int8 (B, D), scale f32 (B, 1))."""
+    scale = jnp.maximum(jnp.abs(x).max(axis=-1, keepdims=True) / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_rows(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def flash_attention(q, k, v, *, causal: bool = True):
+    """Reference attention. q (B, H, S, D); k, v (B, G, S, D) with
+    H = G * group_size (GQA). fp32 softmax."""
+    b, h, s, d = q.shape
+    g = k.shape[1]
+    m = h // g
+    qg = q.reshape(b, g, m, s, d)
+    scores = jnp.einsum("bgmsd,bgtd->bgmst", qg, k,
+                        preferred_element_type=jnp.float32)
+    scores *= d ** -0.5
+    if causal:
+        mask = jnp.tril(jnp.ones((s, k.shape[2]), dtype=bool))
+        scores = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bgmst,bgtd->bgmsd", p.astype(v.dtype), v)
+    return out.reshape(b, h, s, d)
+
+
+def decode_attention(q, k, v, lengths):
+    """Single-token decode. q (B, H, D); k, v (B, S, G, D);
+    lengths (B,) valid cache lengths. fp32 softmax. -> (B, H, D)."""
+    b, h, d = q.shape
+    g = k.shape[2]
+    m = h // g
+    qg = q.reshape(b, g, m, d)
+    scores = jnp.einsum("bgmd,bsgd->bgms", qg, k,
+                        preferred_element_type=jnp.float32) * d ** -0.5
+    valid = jnp.arange(k.shape[1])[None, :] < lengths[:, None]
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bgms,bsgd->bgmd", p.astype(v.dtype), v)
+    return out.reshape(b, h, d)

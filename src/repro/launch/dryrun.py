@@ -1,0 +1,239 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, print memory/cost analysis, and record roofline
+terms. No device allocation — inputs are ShapeDtypeStructs.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b \
+      --shape train_4k [--multi-pod] [--out benchmarks/artifacts]
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+
+import argparse       # noqa: E402
+import json           # noqa: E402
+import time           # noqa: E402
+import traceback      # noqa: E402
+
+import jax            # noqa: E402
+
+from repro.configs import ARCH_IDS, SHAPES, applicable, get_config  # noqa: E402
+from repro.launch.hlo_analysis import parse_collectives             # noqa: E402
+from repro.launch.mesh import (HBM_BW, ICI_LINK_BW, PEAK_FLOPS_BF16,  # noqa: E402
+                               make_production_mesh)
+from repro.launch.specs import (abstract_params, abstract_train_state,  # noqa: E402
+                                input_specs)
+from repro.models.sharding import MeshInfo                          # noqa: E402
+from repro.serving import make_prefill_step, make_serve_step        # noqa: E402
+from repro.training import make_train_step                          # noqa: E402
+
+
+def lower_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
+               opt: bool = False):
+    """Returns (lowered, cfg, shape, mesh_info). ``opt`` enables the
+    beyond-paper layout optimizations from §Perf (vocab-TP logits,
+    group-local MoE dispatch)."""
+    import dataclasses
+
+    from repro.models.sharding import ShardingOptions
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = applicable(cfg, shape)
+    if not ok:
+        raise SkipPair(why)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    # serve layout by memory fit: pure TP-16 when weights/16 leave room for
+    # the (int8) cache under 16 GB HBM, else 2D 256-way weights (§Perf).
+    tp_weight_bytes = cfg.param_counts()["total"] * 2 / 16
+    opts = ShardingOptions(
+        embed_mode="tp" if opt else "fsdp",
+        # serving plane: weight-stationary TP, no per-token FSDP gathers
+        fsdp=not (opt and shape.kind == "decode"),
+        serve_layout="tp" if tp_weight_bytes <= 12e9 else "tp2d",
+    )
+    m = MeshInfo(mesh, opts)
+    if opt:
+        changes = {}
+        if cfg.num_experts and shape.kind == "train":
+            changes["moe_dispatch_groups"] = m.data
+        if shape.kind in ("train", "prefill") and \
+                not m.div(cfg.num_heads, "model"):
+            changes["context_parallel_attn"] = True
+        if shape.kind == "train":
+            changes["loss_chunk"] = 512
+        if changes:
+            cfg = dataclasses.replace(cfg, **changes)
+    # int8 KV cache on the serving plane (memory fit for 90B-class decode)
+    specs = input_specs(cfg, shape, m,
+                        kv_quant=opt and shape.kind == "decode")
+
+    with jax.set_mesh(mesh):
+        if shape.kind == "train":
+            state = abstract_train_state(cfg, m)
+            step = make_train_step(cfg, jit=False)
+            lowered = jax.jit(step).lower(state, specs["batch"])
+        elif shape.kind == "prefill":
+            params = abstract_params(cfg, m)
+            step = make_prefill_step(cfg, jit=False)
+            lowered = jax.jit(step).lower(params, specs["batch"])
+        else:  # decode
+            params = abstract_params(cfg, m)
+            step = make_serve_step(cfg, jit=False)
+            lowered = jax.jit(step).lower(params, specs["cache"],
+                                          specs["tokens"], specs["pos"])
+    return lowered, cfg, shape, m
+
+
+class SkipPair(Exception):
+    pass
+
+
+def model_flops(cfg, shape) -> float:
+    """MFU convention: 6·N_active·tokens (train), 2·N_active·tokens
+    (inference); attention score FLOPs not counted."""
+    n_active = cfg.param_counts()["active"]
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch        # decode: 1 token/seq
+
+
+def analyze(lowered, compiled, cfg, shape, m, *, compile_s: float) -> dict:
+    from repro.launch.cost_model import (activation_estimate,
+                                         analytic_hbm_bytes, corrected_cost)
+
+    n_dev = m.mesh.devices.size
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    coll_raw = parse_collectives(hlo)
+
+    # cost_analysis reports the per-device SPMD program and counts scan
+    # bodies once; corrected_cost adds (repeats-1) x per-segment body cost.
+    cost, cost_detail = corrected_cost(compiled, cfg, m, shape)
+    flops_global = cost.flops_per_device * n_dev
+    bytes_global = cost.bytes_per_device * n_dev
+    coll_bytes_dev = cost.collective_operand_bytes_per_device
+
+    compute_s = flops_global / (n_dev * PEAK_FLOPS_BF16)
+    # memory term: analytic (fusion-aware) estimate; the XLA no-fusion
+    # number is recorded alongside as an upper bound.
+    bytes_est = analytic_hbm_bytes(cfg, shape, m,
+                                   mem.argument_size_in_bytes)
+    memory_s = bytes_est / HBM_BW
+    memory_s_xla = cost.bytes_per_device / HBM_BW
+    collective_s = coll_bytes_dev / ICI_LINK_BW   # per-device link traffic
+
+    mf = model_flops(cfg, shape)
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    return {
+        "devices": n_dev,
+        "compile_seconds": compile_s,
+        "memory": {
+            "argument_bytes_per_device": mem.argument_size_in_bytes,
+            "output_bytes_per_device": mem.output_size_in_bytes,
+            # CPU-backend buffer accounting: sum of all buffers, no
+            # liveness reuse — an upper bound, NOT a peak (see cost_model).
+            "temp_bytes_upper_bound": mem.temp_size_in_bytes,
+            "activation_estimate": activation_estimate(cfg, shape, m),
+        },
+        "cost": {
+            "flops_per_device": cost.flops_per_device,
+            "flops_global": flops_global,
+            "bytes_per_device": cost.bytes_per_device,
+            "bytes_global": bytes_global,
+            "scan_correction": cost_detail,
+        },
+        "collectives": {
+            **coll_raw.as_dict(),
+            "scan_corrected_operand_bytes": coll_bytes_dev,
+            "scan_corrected_counts": cost.collective_counts,
+        },
+        "roofline": {
+            **terms,
+            "memory_s_xla_upper_bound": memory_s_xla,
+            "hbm_bytes_est_per_device": bytes_est,
+            "dominant": dominant,
+            "model_flops": mf,
+            "useful_flops_ratio": mf / flops_global if flops_global else 0.0,
+        },
+    }
+
+
+def run_pair(arch: str, shape_name: str, *, multi_pod: bool,
+             out_dir: str, verbose: bool = True, opt: bool = False) -> dict:
+    mesh_tag = "pod2" if multi_pod else "pod1"
+    tag = f"{arch}__{shape_name}__{mesh_tag}"
+    t0 = time.time()
+    try:
+        lowered, cfg, shape, m = lower_pair(arch, shape_name,
+                                            multi_pod=multi_pod, opt=opt)
+        t_lower = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time()
+        result = analyze(lowered, compiled, cfg, shape, m,
+                         compile_s=t_compile - t_lower)
+        result.update({"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+                       "status": "ok", "lower_seconds": t_lower - t0})
+        if verbose:
+            print(f"== {tag} ==")
+            print(compiled.memory_analysis())
+            ca = compiled.cost_analysis()
+            print({k: ca[k] for k in ("flops", "bytes accessed")
+                   if k in ca})
+    except SkipPair as e:
+        result = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+                  "status": "skip", "reason": str(e)}
+    except Exception as e:  # noqa: BLE001 — record the failure, keep going
+        result = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+                  "status": "error", "error": f"{type(e).__name__}: {e}",
+                  "traceback": traceback.format_exc()[-4000:]}
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(out_dir, f"{tag}.json"), "w") as f:
+            json.dump(result, f, indent=2, default=str)
+    status = result["status"]
+    extra = ""
+    if status == "ok":
+        r = result["roofline"]
+        extra = (f" dominant={r['dominant']} compute={r['compute_s']:.4f}s"
+                 f" memory={r['memory_s']:.4f}s"
+                 f" collective={r['collective_s']:.4f}s"
+                 f" useful={r['useful_flops_ratio']:.2f}")
+    elif status == "error":
+        extra = " " + result["error"][:200]
+    elif status == "skip":
+        extra = " " + result["reason"][:80]
+    print(f"[{status}] {tag}{extra}", flush=True)
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=sorted(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape) on this mesh")
+    ap.add_argument("--opt", action="store_true",
+                    help="beyond-paper layout optimizations (see §Perf)")
+    ap.add_argument("--out", default="benchmarks/artifacts/baseline")
+    args = ap.parse_args()
+
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape_name in SHAPES:
+                run_pair(arch, shape_name, multi_pod=args.multi_pod,
+                         out_dir=args.out, opt=args.opt)
+        return
+    assert args.arch and args.shape, "--arch/--shape or --all"
+    run_pair(args.arch, args.shape, multi_pod=args.multi_pod,
+             out_dir=args.out, opt=args.opt)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""Roofline-term extraction from the compiled SPMD executable.
+
+``cost_analysis`` gives HLO FLOPs and bytes; collective traffic is NOT in
+cost_analysis, so we parse the post-partitioning HLO text and sum operand
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op (per spec; bytes are per-device program traffic).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+# instruction definition: %name = dtype[dims]{layout} opcode(args)
+_DEF_RE = re.compile(
+    r"%?([\w.\-]+)\s*=\s*(\([^)]*\)|[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?)\s+"
+    r"([\w\-]+)\(([^)]*)\)")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([^\]]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """bytes of 'bf16[4,128]{1,0}' or tuple '(f32[2], s32[])'."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            d = d.strip()
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    counts: dict = field(default_factory=dict)      # op -> #instructions
+    operand_bytes: dict = field(default_factory=dict)
+    result_bytes: dict = field(default_factory=dict)
+
+    @property
+    def total_operand_bytes(self) -> int:
+        return sum(self.operand_bytes.values())
+
+    def as_dict(self) -> dict:
+        return {"counts": dict(self.counts),
+                "operand_bytes": dict(self.operand_bytes),
+                "result_bytes": dict(self.result_bytes),
+                "total_operand_bytes": self.total_operand_bytes}
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    # first pass: map every defined value name -> its shape string
+    shapes: dict[str, str] = {}
+    for m in _DEF_RE.finditer(hlo_text):
+        shapes[m.group(1)] = m.group(2)
+
+    stats = CollectiveStats()
+    for m in _DEF_RE.finditer(hlo_text):
+        name, result_shape, opcode, args = m.groups()
+        base = opcode.removesuffix("-start").removesuffix("-done")
+        if base not in COLLECTIVE_OPS:
+            continue
+        if opcode.endswith("-done"):
+            continue                       # avoid double count of async pairs
+        stats.counts[base] = stats.counts.get(base, 0) + 1
+        ob = 0
+        for arg in args.split(","):
+            arg = arg.strip().lstrip("%")
+            # args may be 'bf16[2,4] %name' or just '%name'
+            arg_name = arg.split(" ")[-1].lstrip("%")
+            if arg_name in shapes:
+                ob += _shape_bytes(shapes[arg_name])
+            else:
+                ob += _shape_bytes(arg)
+        stats.operand_bytes[base] = stats.operand_bytes.get(base, 0) + ob
+        stats.result_bytes[base] = (stats.result_bytes.get(base, 0)
+                                    + _shape_bytes(result_shape))
+    return stats
+
+
+def count_hlo_ops(hlo_text: str, opcodes: tuple[str, ...]) -> dict[str, int]:
+    """Counts of specific opcodes (e.g. 'fusion', 'while', 'dot') — used by
+    the perf loop to spot remat recompute and layout churn."""
+    out: dict[str, int] = {}
+    for m in _DEF_RE.finditer(hlo_text):
+        op = m.group(3)
+        if op in opcodes:
+            out[op] = out.get(op, 0) + 1
+    return out

@@ -1,0 +1,26 @@
+"""Production meshes. Functions, not module-level constants — importing
+this module never touches jax device state (device count is locked at
+first backend init; the dry-run sets XLA_FLAGS before importing jax)."""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """TPU v5e: 16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod.
+    The ``pod`` axis joins batch/data sharding only (pure DP across pods)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
+    """Small mesh over whatever devices exist (tests / examples)."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+# TPU v5e hardware constants (per chip) for the roofline model.
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+HBM_BW = 819e9                    # bytes/s
+ICI_LINK_BW = 50e9                # bytes/s per link

@@ -1,0 +1,105 @@
+"""Abstract input specs for the dry-run: ShapeDtypeStructs with attached
+NamedShardings for every (architecture x input shape) combination — the
+shannon/kernels pattern: weak-type-correct, shardable, no allocation."""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import InputShape
+from repro.models import init_cache, init_params
+from repro.models.sharding import (MeshInfo, batch_pspecs, cache_pspecs,
+                                   param_pspecs)
+from repro.optim import Optimizer, get_optimizer
+from repro.training.trainer import TrainState
+
+PyTree = Any
+
+
+def _with_shardings(abstract: PyTree, pspecs: PyTree,
+                    mesh: jax.sharding.Mesh) -> PyTree:
+    def attach(sds, spec):
+        return jax.ShapeDtypeStruct(sds.shape, sds.dtype,
+                                    sharding=NamedSharding(mesh, spec))
+    return jax.tree.map(attach, abstract, pspecs,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def abstract_params(cfg: ModelConfig, m: MeshInfo) -> PyTree:
+    shapes = jax.eval_shape(lambda k: init_params(cfg, k),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    return _with_shardings(shapes, param_pspecs(cfg, m), m.mesh)
+
+
+def _slot_spec(param_spec: P, param_sds, slot_sds) -> P:
+    """Match optimizer-slot sharding to its parameter's sharding."""
+    if slot_sds.shape == param_sds.shape:
+        return param_spec
+    if slot_sds.shape == param_sds.shape[:-1]:               # adafactor vr
+        return P(*param_spec[:-1]) if len(param_spec) else P()
+    if slot_sds.shape == param_sds.shape[:-2] + param_sds.shape[-1:]:
+        return P(*(tuple(param_spec[:-2]) + tuple(param_spec[-1:])))
+    return P(*([None] * len(slot_sds.shape)))
+
+
+def abstract_train_state(cfg: ModelConfig, m: MeshInfo,
+                         optimizer: Optional[Optimizer] = None) -> PyTree:
+    opt = optimizer or get_optimizer(cfg.optimizer)
+    p_shapes = jax.eval_shape(lambda k: init_params(cfg, k),
+                              jax.ShapeDtypeStruct((2,), jnp.uint32))
+    s_shapes = jax.eval_shape(opt.init_slots_tree, p_shapes)
+    pspecs = param_pspecs(cfg, m)
+
+    def slot_specs(param_spec, param_sds, slots):
+        return {name: _slot_spec(param_spec, param_sds, sds)
+                for name, sds in slots.items()}
+
+    sspecs = jax.tree.map(
+        slot_specs, pspecs, p_shapes, s_shapes,
+        is_leaf=lambda x: isinstance(x, P))
+    params = _with_shardings(p_shapes, pspecs, m.mesh)
+    slots = _with_shardings(s_shapes, sspecs, m.mesh)
+    step = jax.ShapeDtypeStruct((), jnp.int32,
+                                sharding=NamedSharding(m.mesh, P()))
+    return TrainState(params=params, slots=slots, step=step)
+
+
+def abstract_cache(cfg: ModelConfig, m: MeshInfo, batch: int,
+                   seq_len: int, kv_quant: bool = False) -> PyTree:
+    shapes = init_cache(cfg, batch, seq_len, dtype=jnp.bfloat16,
+                        abstract=True, kv_quant=kv_quant)
+    return _with_shardings(shapes, cache_pspecs(cfg, m, batch, kv_quant),
+                           m.mesh)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape,
+                m: MeshInfo, kv_quant: bool = False) -> dict[str, PyTree]:
+    """Step arguments (beyond model state) for this input shape."""
+    b = shape.global_batch
+    bspecs = batch_pspecs(cfg, m, shape.kind, b)
+
+    def sds(shp, dtype, spec):
+        return jax.ShapeDtypeStruct(shp, dtype,
+                                    sharding=NamedSharding(m.mesh, spec))
+
+    if shape.kind in ("train", "prefill"):
+        batch = {"tokens": sds((b, shape.seq_len), jnp.int32,
+                               bspecs["tokens"])}
+        if cfg.has_encoder_context:
+            batch["enc_context"] = sds(
+                (b, cfg.encoder_len, cfg.d_model), jnp.bfloat16,
+                bspecs["enc_context"])
+        return {"batch": batch}
+    # decode: one new token against a seq_len cache
+    return {
+        "tokens": sds((b, 1), jnp.int32, bspecs["tokens"]),
+        "pos": sds((b,), jnp.int32, bspecs["pos"]),
+        "cache": abstract_cache(cfg, m, b, shape.seq_len,
+                                kv_quant=kv_quant),
+    }

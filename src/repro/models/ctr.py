@@ -1,0 +1,118 @@
+"""The paper's own model family: sparse CTR models (LR / FM / DNN) whose
+parameters live on the WeiPS parameter server.
+
+Per-example inputs are ``fields`` hashed feature IDs. The PS supplies
+gathered rows; these functions are pure JAX on the gathered values, so
+gradients w.r.t. rows flow back to the PS push path.
+
+Paper §4.1.2: "LR-FTRL has 3 sparse matrices" (w + z + n), "FM-FTRL has 6"
+(w,z,n for linear + latent), "FM-SGD has two", "DNN is multiple sparse plus
+multiple dense" — here groups are {"w": 1} for LR, {"w": 1, "v": k} for FM,
+{"emb": k} + dense MLP for DNN; optimizer slots multiply the stored
+matrices exactly as the paper counts them.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.weips_ctr import CTRConfig
+
+
+def groups_for(cfg: CTRConfig) -> dict[str, int]:
+    if cfg.model_type == "lr":
+        return {"w": 1}
+    if cfg.model_type == "fm":
+        return {"w": 1, "v": cfg.embed_dim}
+    if cfg.model_type == "dnn":
+        return {"emb": cfg.embed_dim}
+    raise ValueError(cfg.model_type)
+
+
+def dense_shapes(cfg: CTRConfig) -> dict[str, tuple[int, ...]]:
+    if cfg.model_type != "dnn":
+        return {}
+    sizes = (cfg.fields * cfg.embed_dim,) + cfg.dnn_hidden + (1,)
+    out = {}
+    for i in range(len(sizes) - 1):
+        out[f"mlp/w{i}"] = (sizes[i], sizes[i + 1])
+        out[f"mlp/b{i}"] = (sizes[i + 1],)
+    return out
+
+
+def init_dense(cfg: CTRConfig, key: jax.Array) -> dict[str, np.ndarray]:
+    out = {}
+    for name, shape in dense_shapes(cfg).items():
+        key, sub = jax.random.split(key)
+        if name.endswith(tuple("b%d" % i for i in range(9))):
+            out[name] = np.zeros(shape, np.float32)
+        else:
+            out[name] = np.asarray(
+                jax.random.normal(sub, shape) * (shape[0] ** -0.5),
+                dtype=np.float32)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Forward / loss — pure functions of the gathered rows
+# ---------------------------------------------------------------------------
+
+
+def lr_logits(rows: dict, dense: dict) -> jax.Array:
+    # rows["w"]: (B, F, 1)
+    return rows["w"][..., 0].sum(axis=1)
+
+
+def fm_logits(rows: dict, dense: dict) -> jax.Array:
+    linear = rows["w"][..., 0].sum(axis=1)                    # (B,)
+    v = rows["v"]                                             # (B, F, k)
+    s = v.sum(axis=1)                                         # (B, k)
+    inter = 0.5 * (jnp.square(s) - jnp.square(v).sum(axis=1)).sum(axis=-1)
+    return linear + inter
+
+
+def dnn_logits(rows: dict, dense: dict) -> jax.Array:
+    emb = rows["emb"]                                         # (B, F, k)
+    h = emb.reshape(emb.shape[0], -1)
+    i = 0
+    while f"mlp/w{i}" in dense:
+        h = h @ dense[f"mlp/w{i}"] + dense[f"mlp/b{i}"]
+        if f"mlp/w{i+1}" in dense:
+            h = jax.nn.relu(h)
+        i += 1
+    return h[:, 0]
+
+
+_LOGITS: dict[str, Callable] = {"lr": lr_logits, "fm": fm_logits,
+                                "dnn": dnn_logits}
+
+
+def predict_fn(cfg: CTRConfig) -> Callable:
+    f = _LOGITS[cfg.model_type]
+
+    @jax.jit
+    def predict(rows, dense):
+        return jax.nn.sigmoid(f(rows, dense))
+
+    return predict
+
+
+def loss_and_grads_fn(cfg: CTRConfig) -> Callable:
+    f = _LOGITS[cfg.model_type]
+
+    def loss(rows, dense, y):
+        logits = f(rows, dense)
+        return jnp.mean(
+            jnp.maximum(logits, 0) - logits * y
+            + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+    @jax.jit
+    def loss_and_grads(rows, dense, y):
+        val, grads = jax.value_and_grad(loss, argnums=(0, 1))(rows, dense, y)
+        return val, grads[0], grads[1]
+
+    return loss_and_grads

@@ -1,0 +1,408 @@
+"""Model composition: parameter init, segment-scanned forward, and
+single-token decode for every architecture family in the zoo.
+
+Layer stacks execute as ``jax.lax.scan`` over *segments* (repeating layer
+patterns, see configs.base.Segment) with params stacked on a leading
+``repeats`` axis — HLO size and compile time are depth-independent.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ATTN, CROSS_ATTN, ENC_ATTN, LOCAL_ATTN, MAMBA,
+                                MLP, MOE, NONE, LayerSpec, ModelConfig, Segment)
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models import ssm
+from repro.models.common import dense_init, rms_norm, subkey
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_attn(key, cfg: ModelConfig) -> dict:
+    d, h, g, e = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    pd = jnp.dtype(cfg.param_dtype)
+    p = {
+        "norm": jnp.zeros((d,), dtype=pd),
+        "wq": dense_init(subkey(key, "wq"), (d, h, e), d, pd),
+        "wk": dense_init(subkey(key, "wk"), (d, g, e), d, pd),
+        "wv": dense_init(subkey(key, "wv"), (d, g, e), d, pd),
+        "wo": dense_init(subkey(key, "wo"), (h, e, d), h * e, pd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, e), dtype=pd)
+        p["bk"] = jnp.zeros((g, e), dtype=pd)
+        p["bv"] = jnp.zeros((g, e), dtype=pd)
+    return p
+
+
+def _init_mlp(key, cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    pd = jnp.dtype(cfg.param_dtype)
+    return {
+        "norm": jnp.zeros((d,), dtype=pd),
+        "w_gate": dense_init(subkey(key, "w_gate"), (d, f), d, pd),
+        "w_up": dense_init(subkey(key, "w_up"), (d, f), d, pd),
+        "w_down": dense_init(subkey(key, "w_down"), (f, d), f, pd),
+    }
+
+
+def _init_moe(key, cfg: ModelConfig) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    pd = jnp.dtype(cfg.param_dtype)
+    return {
+        "norm": jnp.zeros((d,), dtype=pd),
+        "router": dense_init(subkey(key, "router"), (d, e), d, jnp.float32),
+        "w_gate": dense_init(subkey(key, "w_gate"), (e, d, f), d, pd),
+        "w_up": dense_init(subkey(key, "w_up"), (e, d, f), d, pd),
+        "w_down": dense_init(subkey(key, "w_down"), (e, f, d), f, pd),
+    }
+
+
+def _init_mamba(key, cfg: ModelConfig) -> dict:
+    d, di, ns, nh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_num_heads
+    cw = cfg.ssm_conv_width
+    pd = jnp.dtype(cfg.param_dtype)
+    ch = di + 2 * ns
+    return {
+        "norm": jnp.zeros((d,), dtype=pd),
+        "wz": dense_init(subkey(key, "wz"), (d, di), d, pd),
+        "wx": dense_init(subkey(key, "wx"), (d, di), d, pd),
+        "wB": dense_init(subkey(key, "wB"), (d, ns), d, pd),
+        "wC": dense_init(subkey(key, "wC"), (d, ns), d, pd),
+        "wdt": dense_init(subkey(key, "wdt"), (d, nh), d, pd),
+        "conv_w": dense_init(subkey(key, "conv_w"), (cw, ch), cw, pd),
+        "conv_b": jnp.zeros((ch,), dtype=pd),
+        "A_log": jnp.zeros((nh,), dtype=jnp.float32),        # A = -1
+        "D": jnp.ones((nh,), dtype=jnp.float32),
+        "dt_bias": jnp.full((nh,), math.log(math.e - 1), dtype=jnp.float32),
+        "gnorm": jnp.zeros((di,), dtype=pd),
+        "out_proj": dense_init(subkey(key, "out_proj"), (di, d), di, pd),
+    }
+
+
+_MIXER_INIT = {ATTN: _init_attn, LOCAL_ATTN: _init_attn, ENC_ATTN: _init_attn,
+               CROSS_ATTN: _init_attn, MAMBA: _init_mamba}
+_FFN_INIT = {MLP: _init_mlp, MOE: _init_moe}
+
+
+def _init_layer(key, spec: LayerSpec, cfg: ModelConfig) -> dict:
+    p = {"mixer": _MIXER_INIT[spec.mixer](subkey(key, "mixer"), cfg)}
+    if spec.ffn != NONE:
+        p["ffn"] = _FFN_INIT[spec.ffn](subkey(key, "ffn"), cfg)
+    return p
+
+
+def _init_segment(key, seg: Segment, cfg: ModelConfig) -> dict:
+    out = {}
+    for i, spec in enumerate(seg.pattern):
+        base = subkey(key, "pos", i)
+        keys = jax.vmap(lambda r: jax.random.fold_in(base, r))(
+            jnp.arange(seg.repeats))
+        out[f"pos{i}"] = jax.vmap(
+            lambda k, spec=spec: _init_layer(k, spec, cfg))(keys)
+    return out
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> PyTree:
+    pd = jnp.dtype(cfg.param_dtype)
+    params: dict = {
+        "embed": dense_init(subkey(key, "embed"),
+                            (cfg.padded_vocab, cfg.d_model),
+                            cfg.d_model, pd),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype=pd),
+        "segments": [
+            _init_segment(subkey(key, "seg", si), seg, cfg)
+            for si, seg in enumerate(cfg.segments)
+        ],
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(
+            subkey(key, "lm_head"), (cfg.padded_vocab, cfg.d_model),
+            cfg.d_model, pd)
+    if cfg.encoder_segments:
+        params["encoder"] = {
+            "segments": [
+                _init_segment(subkey(key, "enc_seg", si), seg, cfg)
+                for si, seg in enumerate(cfg.encoder_segments)
+            ],
+            "final_norm": jnp.zeros((cfg.d_model,), dtype=pd),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _apply_mixer(spec: LayerSpec, p: dict, x, cfg: ModelConfig, positions,
+                 enc: Optional[jax.Array]):
+    h = rms_norm(x, p["norm"])
+    if spec.mixer in (ATTN, LOCAL_ATTN):
+        window = cfg.window_size if spec.mixer == LOCAL_ATTN else 0
+        return attn.self_attention(p, h, positions, cfg=cfg, causal=True,
+                                   window=window)
+    if spec.mixer == ENC_ATTN:
+        return attn.self_attention(p, h, positions, cfg=cfg, causal=False)
+    if spec.mixer == CROSS_ATTN:
+        return attn.cross_attention(p, h, enc, cfg=cfg)
+    if spec.mixer == MAMBA:
+        return ssm.mamba_block(p, h, cfg)
+    raise ValueError(spec.mixer)
+
+
+def _apply_ffn(spec: LayerSpec, p: dict, x, cfg: ModelConfig):
+    """Returns (out, aux_loss, expert_counts)."""
+    if spec.ffn == NONE:
+        return jnp.zeros_like(x), 0.0, None
+    h = rms_norm(x, p["norm"])
+    if spec.ffn == MLP:
+        gate = jnp.einsum("bsd,df->bsf", h, p["w_gate"])
+        up = jnp.einsum("bsd,df->bsf", h, p["w_up"])
+        out = jnp.einsum("bsf,fd->bsd", jax.nn.silu(gate) * up, p["w_down"])
+        return out, 0.0, None
+    if spec.ffn == MOE:
+        out, aux, counts = moe_lib.moe_ffn(p, h, cfg)
+        return out, aux, counts
+    raise ValueError(spec.ffn)
+
+
+def _run_segments(x, segments_params, segments: tuple[Segment, ...],
+                  cfg: ModelConfig, positions, enc):
+    """Scan each segment; accumulate MoE aux loss and expert counts."""
+    aux_total = jnp.zeros((), dtype=jnp.float32)
+    counts_total = (jnp.zeros((cfg.num_experts,), dtype=jnp.int32)
+                    if cfg.num_experts else None)
+
+    per_layer_counts = []            # one dict {pos: (repeats, E)} per segment
+    for seg, seg_params in zip(segments, segments_params):
+        def body(carry, layer_params, seg=seg):
+            x, aux, counts = carry
+            iter_counts = {}
+            for i, spec in enumerate(seg.pattern):
+                lp = layer_params[f"pos{i}"]
+                x = x + _apply_mixer(spec, lp["mixer"], x, cfg, positions, enc)
+                dx, a, c = _apply_ffn(spec, lp.get("ffn", {}), x, cfg)
+                x = x + dx
+                aux = aux + a
+                if c is not None:
+                    counts = counts + c
+                    iter_counts[f"pos{i}"] = c
+            return (x, aux, counts), iter_counts
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        (x, aux_total, counts_total), seg_counts = jax.lax.scan(
+            body_fn, (x, aux_total, counts_total), seg_params)
+        per_layer_counts.append(seg_counts)
+    return x, aux_total, counts_total, per_layer_counts
+
+
+def encode(params: PyTree, cfg: ModelConfig, enc_input: jax.Array):
+    """Run the encoder stack over stub frontend embeddings (B,T,D)."""
+    x = enc_input.astype(jnp.dtype(cfg.dtype))
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1], dtype=jnp.int32),
+                                 x.shape[:2])
+    x, _, _, _ = _run_segments(x, params["encoder"]["segments"],
+                               cfg.encoder_segments, cfg, positions, None)
+    return rms_norm(x, params["encoder"]["final_norm"])
+
+
+def forward(params: PyTree, cfg: ModelConfig, tokens: jax.Array,
+            enc_context: Optional[jax.Array] = None,
+            positions: Optional[jax.Array] = None,
+            return_hidden: bool = False):
+    """Full-sequence forward. tokens (B,S) int32; enc_context (B,T,D) stub
+    embeddings for vlm/audio. Returns (logits (B,S,V), aux_metrics dict) —
+    or (hidden (B,S,D), metrics) with ``return_hidden`` (chunked-CE loss
+    computes logits itself)."""
+    b, s = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+
+    enc = None
+    if cfg.is_encdec:
+        enc = encode(params, cfg, enc_context)
+    elif cfg.has_encoder_context:
+        enc = enc_context.astype(x.dtype)       # VLM: projected patch embeds
+
+    x, aux, counts, per_layer = _run_segments(
+        x, params["segments"], cfg.segments, cfg, positions, enc)
+    x = rms_norm(x, params["final_norm"])
+    metrics = {"moe_aux": aux}
+    if counts is not None:
+        metrics["expert_counts"] = counts
+        metrics["expert_counts_per_layer"] = per_layer
+    if return_hidden:
+        return x, metrics
+    return _lm_logits(params, cfg, x), metrics
+
+
+def lm_head_weights(params: PyTree, cfg: ModelConfig) -> jax.Array:
+    return params["embed"] if cfg.tie_embeddings else params["lm_head"]
+
+
+def head_logits(head: jax.Array, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """Vocab projection over the padded table; pad columns masked out."""
+    logits = jnp.einsum("bsd,vd->bsv", x, head)
+    if cfg.padded_vocab != cfg.vocab_size:
+        col = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                       logits.ndim - 1)
+        logits = jnp.where(col < cfg.vocab_size, logits, -1e30)
+    return logits
+
+
+def _lm_logits(params: PyTree, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    return head_logits(lm_head_weights(params, cfg), cfg, x)
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve_step body)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int,
+               dtype=jnp.bfloat16, abstract: bool = False,
+               kv_quant: bool = False) -> PyTree:
+    """KV/SSM cache pytree mirroring the segment structure.
+
+    Windowed layers use a ring buffer of size ``window``; attention layers a
+    full ``seq_len`` buffer; mamba layers carry (conv_state, ssm_state);
+    cross-attn layers carry precomputed encoder K/V.
+
+    ``kv_quant`` stores self-attention K/V rows as int8 with per-(token,
+    head) absmax scales — 2x (vs bf16) cache memory at ~1e-2 relative
+    error, the fit-enabler for the 90B-class serving plane (§Perf).
+    """
+    g, e = cfg.num_kv_heads, cfg.head_dim
+
+    def make(shape, dt):
+        if abstract:
+            return jax.ShapeDtypeStruct(shape, dt)
+        return jnp.zeros(shape, dtype=dt)
+
+    def kv_entry(shp):
+        if not kv_quant:
+            return {"k": make(shp, dtype), "v": make(shp, dtype)}
+        s_shp = shp[:-1] + (1,)
+        return {"k": make(shp, jnp.int8), "v": make(shp, jnp.int8),
+                "k_scale": make(s_shp, jnp.float32),
+                "v_scale": make(s_shp, jnp.float32)}
+
+    def layer_cache(spec: LayerSpec, repeats: int):
+        if spec.mixer == ATTN:
+            return kv_entry((repeats, batch, seq_len, g, e))
+        if spec.mixer == LOCAL_ATTN:
+            w = min(cfg.window_size, seq_len)
+            return kv_entry((repeats, batch, w, g, e))
+        if spec.mixer == CROSS_ATTN:
+            shp = (repeats, batch, cfg.encoder_len, g, e)
+            return {"xk": make(shp, dtype), "xv": make(shp, dtype)}
+        if spec.mixer == MAMBA:
+            ch = cfg.d_inner + 2 * cfg.ssm_state
+            return {
+                "conv": make((repeats, batch, cfg.ssm_conv_width - 1, ch),
+                             dtype),
+                "state": make((repeats, batch, cfg.ssm_num_heads,
+                               cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+            }
+        raise ValueError(spec.mixer)
+
+    return {
+        "segments": [
+            {f"pos{i}": layer_cache(spec, seg.repeats)
+             for i, spec in enumerate(seg.pattern)}
+            for seg in cfg.segments
+        ],
+    }
+
+
+def precompute_cross_cache(params: PyTree, cfg: ModelConfig, cache: PyTree,
+                           enc_context: jax.Array) -> PyTree:
+    """Fill cross-attention K/V entries of ``cache`` from encoder context."""
+    enc = (encode(params, cfg, enc_context) if cfg.is_encdec
+           else enc_context.astype(jnp.dtype(cfg.dtype)))
+
+    for seg, seg_params, seg_cache in zip(cfg.segments, params["segments"],
+                                          cache["segments"]):
+        for i, spec in enumerate(seg.pattern):
+            if spec.mixer != CROSS_ATTN:
+                continue
+            lp = seg_params[f"pos{i}"]["mixer"]
+
+            def fill(lp_r):
+                k = jnp.einsum("btd,dgk->btgk", enc, lp_r["wk"])
+                v = jnp.einsum("btd,dgk->btgk", enc, lp_r["wv"])
+                if "bk" in lp_r:
+                    k = k + lp_r["bk"]
+                    v = v + lp_r["bv"]
+                return k, v
+
+            k, v = jax.vmap(fill)(lp)
+            seg_cache[f"pos{i}"]["xk"] = k.astype(
+                seg_cache[f"pos{i}"]["xk"].dtype)
+            seg_cache[f"pos{i}"]["xv"] = v.astype(
+                seg_cache[f"pos{i}"]["xv"].dtype)
+    return cache
+
+
+def _decode_mixer(spec: LayerSpec, p: dict, x, pos, cache: dict,
+                  cfg: ModelConfig):
+    h = rms_norm(x, p["norm"])
+    if spec.mixer in (ATTN, LOCAL_ATTN):
+        window = cfg.window_size if spec.mixer == LOCAL_ATTN else 0
+        if window and cache["k"].shape[1] < window:
+            window = cache["k"].shape[1]
+        out, new_cache = attn.decode_self_attention(
+            p, h, pos, cache, cfg=cfg, window=window)
+        return out, new_cache
+    if spec.mixer == CROSS_ATTN:
+        out = attn.decode_cross_attention(p, h, cache["xk"], cache["xv"],
+                                          cfg=cfg)
+        return out, cache
+    if spec.mixer == MAMBA:
+        out, conv, state = ssm.mamba_decode_step(p, h, cache["conv"],
+                                                 cache["state"], cfg)
+        return out, {"conv": conv, "state": state}
+    raise ValueError(spec.mixer)
+
+
+def decode_step(params: PyTree, cfg: ModelConfig, cache: PyTree,
+                tokens: jax.Array, pos: jax.Array):
+    """One decode step. tokens (B,1) int32; pos (B,) int32 positions of the
+    new token. Returns (logits (B,V), new_cache)."""
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+
+    new_cache_segments = []
+    for seg, seg_params, seg_cache in zip(cfg.segments, params["segments"],
+                                          cache["segments"]):
+        def body(x, xs, seg=seg):
+            layer_params, layer_cache = xs
+            new_cache = {}
+            for i, spec in enumerate(seg.pattern):
+                lp = layer_params[f"pos{i}"]
+                dx, nc = _decode_mixer(spec, lp["mixer"], x, pos,
+                                       layer_cache[f"pos{i}"], cfg)
+                x = x + dx
+                dxf, _, _ = _apply_ffn(spec, lp.get("ffn", {}), x, cfg)
+                x = x + dxf
+                new_cache[f"pos{i}"] = nc
+            return x, new_cache
+
+        x, new_seg_cache = jax.lax.scan(body, x, (seg_params, seg_cache))
+        new_cache_segments.append(new_seg_cache)
+
+    x = rms_norm(x, params["final_norm"])
+    logits = _lm_logits(params, cfg, x)[:, 0]
+    return logits, {"segments": new_cache_segments}

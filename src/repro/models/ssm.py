@@ -1,0 +1,180 @@
+"""Mamba-2 (SSD — state-space duality) blocks: chunked quadratic-within-
+chunk / linear-across-chunk training & prefill path, and O(1)-state decode.
+
+Follows the SSD formulation of arXiv:2405.21060 (single B/C group):
+    h_t = exp(dt_t·A) h_{t-1} + dt_t · x_t ⊗ B_t        (state (H, P, N))
+    y_t = C_t · h_t + D ⊙ x_t
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import rms_norm
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None):
+    """Depthwise causal conv1d. x (B,S,C); w (K,C); b (C,).
+
+    Returns (y (B,S,C), new_state (B,K-1,C)). ``state`` carries the last
+    K-1 inputs for decode continuity (zeros for a fresh sequence)."""
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), dtype=x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)                 # (B, S+K-1, C)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k)) + b
+    new_state = xp[:, -(k - 1):] if k > 1 else state
+    return y, new_state
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int,
+                initial_state: Optional[jax.Array] = None):
+    """Chunked SSD scan.
+
+    x (b,s,h,p); dt (b,s,h) positive; A (h,) negative; B, C (b,s,n).
+    Returns (y (b,s,h,p), final_state (b,h,p,n)).
+    """
+    b, s_orig, h, p = x.shape
+    n = B.shape[-1]
+    pad = (-s_orig) % chunk
+    if pad:
+        # zero-pad: dt=0 gives decay exp(0)=1 and zero input contribution,
+        # so padded steps are identity on the state and emit garbage rows
+        # that are sliced off below.
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    s = s_orig + pad
+    nc, l = s // chunk, chunk
+    f32 = jnp.float32
+
+    xdt = (x * dt[..., None]).astype(f32)                    # dt-discretized input
+    dA = (dt * A).astype(f32)                                # (b,s,h), negative
+    xdt = xdt.reshape(b, nc, l, h, p)
+    dA = dA.reshape(b, nc, l, h)
+    Bc = B.reshape(b, nc, l, n).astype(f32)
+    Cc = C.reshape(b, nc, l, n).astype(f32)
+
+    dA_cs = jnp.cumsum(dA, axis=2)                           # (b,nc,l,h) inclusive
+
+    # --- intra-chunk (quadratic within the chunk) ----------------------
+    seg = dA_cs[:, :, :, None, :] - dA_cs[:, :, None, :, :]  # (b,nc,i,j,h)
+    causal = jnp.tril(jnp.ones((l, l), dtype=bool))
+    L = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    CB = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)               # (b,nc,l,l)
+    y_diag = jnp.einsum("bcij,bcijh,bcjhp->bcihp", CB, L, xdt)
+
+    # --- chunk states ---------------------------------------------------
+    decay_states = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)      # (b,nc,l,h)
+    states = jnp.einsum("bcln,bclh,bclhp->bchpn", Bc, decay_states, xdt)
+
+    # --- inter-chunk recurrence ------------------------------------------
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])                # (b,nc,h)
+    h0 = (initial_state.astype(f32) if initial_state is not None
+          else jnp.zeros((b, h, p, n), dtype=f32))
+
+    def body(carry, xs):
+        st, dec = xs                                         # (b,h,p,n), (b,h)
+        new = carry * dec[:, :, None, None] + st
+        return new, carry                                    # emit PREVIOUS state
+
+    final_state, prev_states = jax.lax.scan(
+        body, h0, (states.transpose(1, 0, 2, 3, 4),
+                   chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)       # (b,nc,h,p,n)
+
+    # --- contribution of carried-in state --------------------------------
+    state_decay = jnp.exp(dA_cs)                             # (b,nc,l,h)
+    y_off = jnp.einsum("bcln,bchpn,bclh->bclhp", Cc, prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(b, s, h, p)[:, :s_orig]
+    return y.astype(x.dtype), final_state
+
+
+def ssd_decode_step(state, x, dt, A, B, C):
+    """Single-token recurrence. state (b,h,p,n); x (b,h,p); dt (b,h);
+    A (h,); B, C (b,n). Returns (y (b,h,p), new_state)."""
+    f32 = jnp.float32
+    decay = jnp.exp((dt * A).astype(f32))                    # (b,h)
+    upd = jnp.einsum("bhp,bn->bhpn", (x * dt[..., None]).astype(f32),
+                     B.astype(f32))
+    new_state = state * decay[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, C.astype(f32))
+    return y.astype(x.dtype), new_state
+
+
+def _projections(p: dict, x: jax.Array, cfg: ModelConfig):
+    z = jnp.einsum("bsd,de->bse", x, p["wz"])
+    xin = jnp.einsum("bsd,de->bse", x, p["wx"])
+    Bv = jnp.einsum("bsd,dn->bsn", x, p["wB"])
+    Cv = jnp.einsum("bsd,dn->bsn", x, p["wC"])
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, p["wdt"])
+    return z, xin, Bv, Cv, dt_raw
+
+
+def mamba_block(p: dict, x: jax.Array, cfg: ModelConfig,
+                initial_state=None, return_state: bool = False):
+    """Full Mamba-2 mixer for train/prefill. x (B,S,D) -> (B,S,D)."""
+    b, s, d = x.shape
+    di, ns, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_num_heads
+    hp = cfg.ssm_head_dim
+    z, xin, Bv, Cv, dt_raw = _projections(p, x, cfg)
+
+    conv_in = jnp.concatenate([xin, Bv, Cv], axis=-1)        # (B,S,di+2n)
+    conv_out, _ = _causal_conv(conv_in, p["conv_w"], p["conv_b"])
+    conv_out = jax.nn.silu(conv_out)
+    xin = conv_out[..., :di]
+    Bv = conv_out[..., di:di + ns]
+    Cv = conv_out[..., di + ns:]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xin.reshape(b, s, nh, hp)
+    y, final_state = ssd_chunked(xh, dt, A, Bv, Cv, cfg.ssm_chunk,
+                                 initial_state=initial_state)
+    y = y + p["D"].astype(y.dtype)[None, None, :, None] * xh
+    y = y.reshape(b, s, di)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p["gnorm"])
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    if return_state:
+        return out, final_state
+    return out
+
+
+def mamba_decode_step(p: dict, x: jax.Array, conv_state: jax.Array,
+                      ssm_state: jax.Array, cfg: ModelConfig):
+    """One-token decode. x (B,1,D); conv_state (B,K-1,di+2n);
+    ssm_state (B,H,P,N) fp32. Returns (out (B,1,D), conv_state, ssm_state).
+    """
+    b = x.shape[0]
+    di, ns, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_num_heads
+    hp = cfg.ssm_head_dim
+    z, xin, Bv, Cv, dt_raw = _projections(p, x, cfg)
+
+    conv_in = jnp.concatenate([xin, Bv, Cv], axis=-1)        # (B,1,di+2n)
+    conv_out, conv_state = _causal_conv(conv_in, p["conv_w"], p["conv_b"],
+                                        state=conv_state)
+    conv_out = jax.nn.silu(conv_out)
+    xin = conv_out[..., :di]
+    Bv = conv_out[..., di:di + ns]
+    Cv = conv_out[..., di + ns:]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))[:, 0]   # (B,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xin[:, 0].reshape(b, nh, hp)
+    y, ssm_state = ssd_decode_step(ssm_state, xh, dt, A, Bv[:, 0], Cv[:, 0])
+    y = y + p["D"].astype(y.dtype)[None, :, None] * xh
+    y = y.reshape(b, 1, di)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p["gnorm"])
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return out, conv_state, ssm_state

@@ -1,0 +1,5 @@
+from repro.optim.optimizers import (Adafactor, Adagrad, Adam, FTRL, Momentum,
+                                    Optimizer, SGD, get_optimizer)
+
+__all__ = ["Adafactor", "Adagrad", "Adam", "FTRL", "Momentum", "Optimizer",
+           "SGD", "get_optimizer"]

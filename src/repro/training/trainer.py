@@ -1,0 +1,121 @@
+"""Training plane: TrainState, loss, and the pjit-able train_step factory.
+
+``make_train_step`` builds the jitted step for any ModelConfig; batches are
+{"tokens": (B, S) int32, optional "enc_context": (B, T, D)}. Labels are the
+next-token shift of ``tokens`` (documents are pre-packed by the data
+pipeline). The step returns progressive-validation metrics *before* the
+update is applied (paper §4.3.1) alongside the post-update state.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import forward, init_params
+from repro.optim import Optimizer, get_optimizer
+
+PyTree = Any
+
+
+class TrainState(NamedTuple):
+    params: PyTree
+    slots: PyTree
+    step: jax.Array
+
+
+def init_train_state(cfg: ModelConfig, key: jax.Array,
+                     optimizer: Optional[Optimizer] = None) -> TrainState:
+    params = init_params(cfg, key)
+    opt = optimizer or get_optimizer(cfg.optimizer)
+    slots = opt.init_slots_tree(params)
+    return TrainState(params=params, slots=slots,
+                      step=jnp.zeros((), jnp.int32))
+
+
+def _chunked_ce(hidden: jax.Array, head: jax.Array, targets: jax.Array,
+                cfg: ModelConfig) -> jax.Array:
+    """Cross-entropy over S-chunks: logits for one chunk at a time, with
+    per-chunk remat — the (B, S, V) fp32 logits tensor is never fully
+    materialized, and the vocab head crosses the mesh once instead of the
+    full logits tensor (§Perf)."""
+    from repro.models.model import head_logits
+
+    b, s, d = hidden.shape
+    chunk = cfg.loss_chunk
+    pad = (-s) % chunk
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)), constant_values=-1)
+    n_chunks = (s + pad) // chunk
+    hidden = hidden.reshape(b, n_chunks, chunk, d).transpose(1, 0, 2, 3)
+    targets = targets.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        h_c, t_c = xs
+        logits = head_logits(head, cfg, h_c).astype(jnp.float32)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(
+            logp, jnp.maximum(t_c, 0)[..., None], axis=-1)[..., 0]
+        valid = (t_c >= 0).astype(jnp.float32)
+        return (carry[0] + (nll * valid).sum(), carry[1] + valid.sum()), None
+
+    (total, count), _ = jax.lax.scan(
+        body, (jnp.zeros(()), jnp.zeros(())), (hidden, targets))
+    return total / jnp.maximum(count, 1.0)
+
+
+def loss_fn(params: PyTree, cfg: ModelConfig, batch: dict,
+            aux_weight: float = 0.01):
+    tokens = batch["tokens"]
+    targets = tokens[:, 1:]
+    if cfg.loss_chunk:
+        from repro.models.model import lm_head_weights
+        hidden, metrics = forward(params, cfg, tokens,
+                                  enc_context=batch.get("enc_context"),
+                                  return_hidden=True)
+        ce = _chunked_ce(hidden[:, :-1], lm_head_weights(params, cfg),
+                         targets, cfg)
+    else:
+        logits, metrics = forward(params, cfg, tokens,
+                                  enc_context=batch.get("enc_context"))
+        logits = logits[:, :-1].astype(jnp.float32)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, targets[..., None],
+                                   axis=-1)[..., 0]
+        ce = nll.mean()
+    loss = ce + aux_weight * metrics.get("moe_aux", 0.0)
+    out_metrics = {
+        "loss": loss,
+        "ce": ce,
+        "ppl_log": ce,
+        "moe_aux": metrics.get("moe_aux", jnp.zeros(())),
+    }
+    if "expert_counts" in metrics:
+        out_metrics["expert_counts"] = metrics["expert_counts"]
+        out_metrics["expert_counts_per_layer"] = \
+            metrics["expert_counts_per_layer"]
+    return loss, out_metrics
+
+
+def make_train_step(cfg: ModelConfig, optimizer: Optional[Optimizer] = None,
+                    aux_weight: float = 0.01, jit: bool = True,
+                    donate: bool = True):
+    opt = optimizer or get_optimizer(cfg.optimizer)
+
+    def train_step(state: TrainState, batch: dict):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state.params, cfg, batch, aux_weight)
+        new_params, new_slots = opt.update_tree(
+            state.params, state.slots, grads, state.step)
+        new_state = TrainState(params=new_params, slots=new_slots,
+                               step=state.step + 1)
+        return new_state, metrics
+
+    if jit:
+        return jax.jit(train_step, donate_argnums=(0,) if donate else ())
+    return train_step

@@ -1,0 +1,169 @@
+"""Multi-level fault tolerance: cold backup (full/partial/resharded
+recovery with queue-offset replay) and hot backup (replica failover,
+bootstrap catch-up)."""
+
+import numpy as np
+import pytest
+
+from repro.configs.weips_ctr import FM_FTRL, LR_FTRL
+from repro.core import ClusterConfig, WeiPSCluster
+from repro.core.fault_tolerance import (BackupPolicy, CheckpointStore,
+                                        ColdBackup, ReplicaSet)
+from repro.core.ps import MasterShard, SlaveShard
+from repro.data import ClickStream
+
+
+def _cluster(**kw):
+    defaults = dict(num_master=3, num_slave=2, num_replicas=2,
+                    num_partitions=4, gather_mode="realtime",
+                    local_ckpt_interval=1.0, remote_ckpt_interval=50.0)
+    defaults.update(kw)
+    return WeiPSCluster(LR_FTRL, ClusterConfig(**defaults))
+
+
+def _run(cl, stream, steps, t0=0.0, dt=0.5):
+    for i in range(steps):
+        ids, y = cl_batch(stream)
+        now = t0 + i * dt
+        cl.train_on_batch(ids, y, now=now)
+        cl.sync_tick(now)
+        cl.maybe_checkpoint(now)
+    return t0 + steps * dt
+
+
+def cl_batch(stream, n=32):
+    return stream.batch(n)
+
+
+def test_cold_backup_full_recovery():
+    cl = _cluster()
+    stream = ClickStream(feature_space=1 << 12, fields=LR_FTRL.fields)
+    now = _run(cl, stream, 12)
+    v = cl.checkpoint(now)
+    before = {g: t.snapshot() for m in cl.masters
+              for g, t in m.tables.items() if m.shard_id == 0}
+    # catastrophic loss of every master
+    for m in cl.masters:
+        m.kill()
+        m.clear()
+    cl.cold_backup.recover_all(cl.masters, version=v)
+    after = cl.masters[0].tables["w"].snapshot()
+    order_b = np.argsort(before["w"]["ids"])
+    order_a = np.argsort(after["ids"])
+    np.testing.assert_array_equal(before["w"]["ids"][order_b],
+                                  after["ids"][order_a])
+    np.testing.assert_allclose(before["w"]["w"][order_b],
+                               after["w"][order_a], rtol=1e-6)
+
+
+def test_partial_single_shard_recovery():
+    """Only the crashed shard recovers; the others keep their live (newer)
+    state — the cluster never restarts (paper §4.2.1e)."""
+    cl = _cluster()
+    stream = ClickStream(feature_space=1 << 12, fields=LR_FTRL.fields)
+    now = _run(cl, stream, 10)
+    cl.checkpoint(now)
+    live_other = cl.masters[1].tables["w"].snapshot()
+    cl.kill_master(0)
+    with pytest.raises(AssertionError):
+        cl.masters[0].pull("w", np.array([1]))
+    cl.recover_master(0)
+    assert cl.masters[0].alive
+    # shard 1 untouched by shard 0's recovery
+    after_other = cl.masters[1].tables["w"].snapshot()
+    np.testing.assert_array_equal(np.sort(live_other["ids"]),
+                                  np.sort(after_other["ids"]))
+
+
+def test_recovery_streams_missing_updates_to_slaves():
+    """After recovery the replayed full-state push reconverges slaves."""
+    cl = _cluster()
+    stream = ClickStream(feature_space=1 << 10, fields=LR_FTRL.fields)
+    now = _run(cl, stream, 8)
+    cl.checkpoint(now)
+    now = _run(cl, stream, 4, t0=now + 1)     # updates after checkpoint
+    cl.kill_master(0)
+    cl.recover_master(0)
+    cl.sync_tick(now + 10)
+    # every slave row equals the (possibly rolled-back) master value
+    m = cl.masters[0]
+    ids = m.tables["w"].all_ids()
+    if len(ids) == 0:
+        return
+    w, slots = m.tables["w"].gather(ids)
+    serve = cl.transform.serve_values(w, slots)
+    owner = cl.plan.slave_shard(ids)
+    for sid, rs in enumerate(cl.replica_sets):
+        mask = owner == sid
+        if mask.any():
+            got = rs.replicas[0].lookup("w", ids[mask])
+            np.testing.assert_allclose(got, serve[mask], rtol=1e-5,
+                                       atol=1e-6)
+
+
+def test_reshard_recovery_10_to_20_style():
+    """Dynamic routing on reload: checkpoint from 3 shards loads into 5
+    (paper §4.2.1d migration example)."""
+    opt_groups = {"w": 1}
+    from repro.optim import get_optimizer
+    opt = get_optimizer("sgd", lr=0.1)
+    src = [MasterShard(i, opt_groups, opt) for i in range(3)]
+    rng = np.random.default_rng(1)
+    from repro.core import RoutingPlan
+    plan_src = RoutingPlan(3, 1, 1)
+    all_ids = rng.choice(1 << 20, size=200, replace=False).astype(np.int64)
+    split = plan_src.split_by_master(all_ids)
+    for sid, ids in split.items():
+        src[sid].push_grad("w", ids, rng.normal(size=(len(ids), 1))
+                           .astype(np.float32))
+    store = CheckpointStore()
+    cb = ColdBackup(src, store, BackupPolicy())
+    v = cb.checkpoint(0.0)
+
+    dst = [MasterShard(i, opt_groups, opt) for i in range(5)]
+    plan_dst = RoutingPlan(5, 1, 1)
+    cb.recover_all(dst, version=v, owner_of=plan_dst.master_shard)
+    # every id lives on exactly its new owner, with identical values
+    for sid, shard in enumerate(dst):
+        ids = shard.tables["w"].all_ids()
+        np.testing.assert_array_equal(plan_dst.master_shard(ids), sid)
+    total = sum(len(s.tables["w"]) for s in dst)
+    assert total == len(all_ids)
+
+
+def test_hot_backup_failover_zero_downtime():
+    cl = _cluster()
+    stream = ClickStream(feature_space=1 << 10, fields=LR_FTRL.fields)
+    _run(cl, stream, 6)
+    ids, _ = stream.batch(16)
+    p_before = cl.predict(ids)
+    cl.kill_slave_replica(0, 0)      # kill one replica of shard 0
+    p_after = cl.predict(ids)        # must not raise
+    np.testing.assert_allclose(p_before, p_after, rtol=1e-5)
+    assert cl.replica_sets[0].failovers >= 0
+    assert len(cl.replica_sets[0].healthy()) == 1
+
+
+def test_all_replicas_down_raises():
+    cl = _cluster()
+    stream = ClickStream(feature_space=1 << 10, fields=LR_FTRL.fields)
+    _run(cl, stream, 3)
+    cl.kill_slave_replica(0, 0)
+    cl.kill_slave_replica(0, 1)
+    ids = np.array([[1, 2, 3, 4] * 8])
+    with pytest.raises(RuntimeError):
+        cl.predict(ids % (1 << 10))
+
+
+def test_replica_bootstrap_full_sync():
+    cl = _cluster()
+    stream = ClickStream(feature_space=1 << 10, fields=LR_FTRL.fields)
+    _run(cl, stream, 6)
+    rs = cl.replica_sets[0]
+    fresh = SlaveShard(0, cl.groups)
+    rs.add_replica(fresh)
+    peer = rs.replicas[0]
+    ids = peer.tables["w"].all_ids()
+    if len(ids):
+        np.testing.assert_allclose(fresh.lookup("w", ids),
+                                   peer.lookup("w", ids), rtol=1e-6)

@@ -1,0 +1,137 @@
+"""Per-kernel shape/dtype sweeps vs. the pure-jnp oracles in ref.py
+(assignment requirement). Kernels run in interpret mode on CPU."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("v,d,n", [(32, 128, 8), (257, 256, 33),
+                                   (64, 384, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_embedding_lookup_sweep(v, d, n, dtype):
+    table = jax.random.normal(KEY, (v, d), dtype=jnp.float32).astype(dtype)
+    ids = jax.random.randint(jax.random.fold_in(KEY, 1), (n,), 0, v)
+    got = ops.embedding_lookup(table, ids)
+    want = ref.embedding_lookup(table, ids)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("v,d,n", [(64, 128, 16), (128, 256, 64)])
+def test_embedding_scatter_add_sweep(v, d, n):
+    table = jax.random.normal(KEY, (v, d))
+    ids = jax.random.randint(jax.random.fold_in(KEY, 2), (n,), 0, v)
+    upd = jax.random.normal(jax.random.fold_in(KEY, 3), (n, d))
+    got = ops.embedding_scatter_add(table, ids, upd)
+    want = ref.embedding_scatter_add(table, ids, upd)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_embedding_scatter_add_heavy_duplicates():
+    table = jnp.zeros((8, 128))
+    ids = jnp.zeros((64,), jnp.int32)           # all hit row 0
+    upd = jnp.ones((64, 128))
+    got = ops.embedding_scatter_add(table, ids, upd)
+    np.testing.assert_allclose(got[0], np.full(128, 64.0), rtol=1e-6)
+    np.testing.assert_allclose(got[1:], np.zeros((7, 128)))
+
+
+@pytest.mark.parametrize("b,d", [(8, 128), (300, 256), (1, 512)])
+@pytest.mark.parametrize("params", [
+    dict(alpha=0.05, beta=1.0, l1=1.0, l2=1.0),
+    dict(alpha=0.1, beta=0.5, l1=0.0, l2=0.1),
+])
+def test_ftrl_sweep(b, d, params):
+    ks = jax.random.split(jax.random.fold_in(KEY, b * d), 3)
+    z = jax.random.normal(ks[0], (b, d)) * 2
+    n = jax.random.uniform(ks[1], (b, d)) * 4
+    g = jax.random.normal(ks[2], (b, d))
+    got = ops.ftrl_row_update(z, n, g, **params)
+    want = ref.ftrl_row_update(z, n, g, **params)
+    for a, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(w),
+                                   rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("b,d", [(4, 128), (100, 256), (1, 1024)])
+def test_codec_sweep(b, d):
+    x = jax.random.normal(jax.random.fold_in(KEY, b + d), (b, d)) * 10
+    q, s = ops.quantize_rows(x)
+    qr, sr = ref.quantize_rows(x)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+    got = ops.dequantize_rows(q, s)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(x),
+                               atol=float(np.abs(x).max()) / 120)
+
+
+@given(st.floats(-1e4, 1e4, width=32))
+@settings(max_examples=30, deadline=None)
+def test_codec_roundtrip_error_property(scale):
+    x = jnp.asarray(np.linspace(-abs(scale) - 1, abs(scale) + 1, 256,
+                                dtype=np.float32)).reshape(1, 256)
+    q, s = ops.quantize_rows(x)
+    back = ops.dequantize_rows(q, s)
+    step = float(np.abs(x).max()) / 127.0
+    assert float(np.abs(np.asarray(back) - np.asarray(x)).max()) <= \
+        step / 2 + 1e-5
+
+
+@pytest.mark.parametrize("b,h,g,s,d", [
+    (1, 4, 2, 128, 128),       # GQA 2:1
+    (2, 4, 4, 256, 128),       # MHA
+    (1, 8, 1, 128, 256),       # MQA, bigger head
+])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(b, h, g, s, d, causal, dtype):
+    ks = jax.random.split(jax.random.fold_in(KEY, b * h * s), 3)
+    q = jax.random.normal(ks[0], (b, h, s, d), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (b, g, s, d), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (b, g, s, d), jnp.float32).astype(dtype)
+    got = ops.flash_attention(q, k, v, causal=causal)
+    want = ref.flash_attention(q, k, v, causal=causal)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("b,h,g,s,d,block", [
+    (2, 8, 2, 1024, 128, 512),
+    (1, 4, 4, 512, 128, 128),
+    (3, 2, 1, 2048, 256, 512),
+])
+def test_decode_attention_sweep(b, h, g, s, d, block):
+    ks = jax.random.split(jax.random.fold_in(KEY, b * h + s), 4)
+    q = jax.random.normal(ks[0], (b, h, d))
+    k = jax.random.normal(ks[1], (b, s, g, d))
+    v = jax.random.normal(ks[2], (b, s, g, d))
+    lengths = jax.random.randint(ks[3], (b,), 1, s + 1)
+    got = ops.decode_attention(q, k, v, lengths, block_k=block)
+    want = ref.decode_attention(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_short_lengths():
+    """Valid-length masking: only the first `len` cache slots count."""
+    b, h, g, s, d = 1, 2, 1, 512, 128
+    q = jax.random.normal(KEY, (b, h, d))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (b, s, g, d))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (b, s, g, d))
+    # poison the tail: results must not change
+    k_poison = k.at[:, 10:].set(1e6)
+    v_poison = v.at[:, 10:].set(1e6)
+    lengths = jnp.array([10], jnp.int32)
+    a = ops.decode_attention(q, k, v, lengths)
+    bb = ops.decode_attention(q, k_poison, v_poison, lengths)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(bb), rtol=1e-6)

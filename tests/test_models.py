@@ -1,0 +1,186 @@
+"""Model correctness: decode == forward (incremental consistency), SSD vs
+naive recurrence oracle, block-local windowed attention vs masked oracle,
+MoE dispatch semantics."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import (decode_step, forward, init_cache, init_params,
+                          precompute_cross_cache)
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models import ssm
+
+CONSISTENCY_ARCHS = ["qwen2-1.5b", "mamba2-1.3b", "gemma3-4b",
+                     "jamba-1.5-large-398b", "whisper-medium",
+                     "llama-3.2-vision-90b", "dbrx-132b"]
+
+
+@pytest.mark.parametrize("arch", CONSISTENCY_ARCHS)
+def test_decode_matches_forward(arch):
+    cfg = reduced(get_config(arch))
+    if cfg.num_experts:
+        # disable capacity dropping so both paths compute identically
+        cfg = dataclasses.replace(cfg, moe_capacity_factor=8.0)
+    key = jax.random.PRNGKey(1)
+    params = init_params(cfg, key)
+    B, S = 2, 24
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    enc = (jax.random.normal(key, (B, cfg.encoder_len, cfg.d_model))
+           if cfg.has_encoder_context else None)
+    full, _ = forward(params, cfg, tokens, enc_context=enc)
+    cache = init_cache(cfg, B, S, dtype=jnp.float32)
+    if cfg.has_encoder_context:
+        cache = precompute_cross_cache(params, cfg, cache, enc)
+    step = jax.jit(lambda c, t, p: decode_step(params, cfg, c, t, p))
+    worst = 0.0
+    for t in range(S):
+        lg, cache = step(cache, tokens[:, t:t + 1],
+                         jnp.full((B,), t, jnp.int32))
+        err = float(jnp.abs(lg[:, :cfg.vocab_size]
+                            - full[:, t, :cfg.vocab_size]).max())
+        worst = max(worst, err)
+    assert worst < 5e-4, f"{arch}: decode/forward divergence {worst}"
+
+
+def test_ssd_matches_naive_recurrence():
+    """Chunked SSD == step-by-step recurrence h_t = exp(dtA)h + dt x B."""
+    key = jax.random.PRNGKey(0)
+    b, s, h, p, n = 2, 20, 3, 4, 8
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (b, s, n))
+    C = jax.random.normal(ks[4], (b, s, n))
+
+    y_chunk, final = ssm.ssd_chunked(x, dt, A, B, C, chunk=8)
+
+    state = jnp.zeros((b, h, p, n))
+    ys = []
+    for t in range(s):
+        y_t, state = ssm.ssd_decode_step(state, x[:, t], dt[:, t], A,
+                                         B[:, t], C[:, t])
+        ys.append(y_t)
+    y_naive = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(y_chunk, y_naive, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(final, state, rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_initial_state_threading():
+    """Splitting a sequence in two with state handoff == one pass."""
+    key = jax.random.PRNGKey(3)
+    b, s, h, p, n = 1, 16, 2, 4, 4
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (b, s, n))
+    C = jax.random.normal(ks[4], (b, s, n))
+    y_full, _ = ssm.ssd_chunked(x, dt, A, B, C, chunk=4)
+    y1, st = ssm.ssd_chunked(x[:, :8], dt[:, :8], A, B[:, :8], C[:, :8],
+                             chunk=4)
+    y2, _ = ssm.ssd_chunked(x[:, 8:], dt[:, 8:], A, B[:, 8:], C[:, 8:],
+                            chunk=4, initial_state=st)
+    np.testing.assert_allclose(jnp.concatenate([y1, y2], axis=1), y_full,
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_block_local_matches_masked_reference():
+    cfg = reduced(get_config("gemma3-4b"))
+    cfg = dataclasses.replace(cfg, window_size=8)
+    key = jax.random.PRNGKey(2)
+    b, s = 2, 32
+    p = {
+        "wq": jax.random.normal(key, (cfg.d_model, cfg.num_heads,
+                                      cfg.head_dim)) * 0.05,
+        "wk": jax.random.normal(key, (cfg.d_model, cfg.num_kv_heads,
+                                      cfg.head_dim)) * 0.05,
+        "wv": jax.random.normal(key, (cfg.d_model, cfg.num_kv_heads,
+                                      cfg.head_dim)) * 0.05,
+        "wo": jax.random.normal(key, (cfg.num_heads, cfg.head_dim,
+                                      cfg.d_model)) * 0.05,
+    }
+    x = jax.random.normal(key, (b, s, cfg.d_model))
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    # block-local path (s > window, s % window == 0)
+    out_block = attn.self_attention(p, x, positions, cfg=cfg, causal=True,
+                                    window=8)
+    # masked full path (force via window > chunk threshold trick: use the
+    # small-s branch by passing chunk >= s)
+    out_masked = attn.self_attention(p, x, positions, cfg=cfg, causal=True,
+                                     window=0, chunk=64)
+    # apply window mask manually through the masked branch: recompute with
+    # the (s <= chunk) branch and window set
+    cfg_small = cfg
+    out_masked_win = attn.self_attention(p, x, positions, cfg=cfg_small,
+                                         causal=True, window=8, chunk=64)
+    assert not np.allclose(out_masked, out_masked_win)   # window changes it
+    np.testing.assert_allclose(out_block, out_masked_win, rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_chunked_causal_matches_full():
+    cfg = reduced(get_config("qwen2-7b"))
+    key = jax.random.PRNGKey(4)
+    b, s = 2, 64
+    p = {
+        "wq": jax.random.normal(key, (cfg.d_model, cfg.num_heads,
+                                      cfg.head_dim)) * 0.05,
+        "wk": jax.random.normal(key, (cfg.d_model, cfg.num_kv_heads,
+                                      cfg.head_dim)) * 0.05,
+        "wv": jax.random.normal(key, (cfg.d_model, cfg.num_kv_heads,
+                                      cfg.head_dim)) * 0.05,
+        "wo": jax.random.normal(key, (cfg.num_heads, cfg.head_dim,
+                                      cfg.d_model)) * 0.05,
+    }
+    x = jax.random.normal(key, (b, s, cfg.d_model))
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    out_chunked = attn.self_attention(p, x, positions, cfg=cfg, causal=True,
+                                      chunk=16)       # forces kv-chunk scan
+    out_full = attn.self_attention(p, x, positions, cfg=cfg, causal=True,
+                                   chunk=s)
+    np.testing.assert_allclose(out_chunked, out_full, rtol=2e-4, atol=2e-4)
+
+
+def test_moe_routing_topk_and_counts():
+    cfg = reduced(get_config("dbrx-132b"))
+    key = jax.random.PRNGKey(5)
+    p = {
+        "router": jax.random.normal(key, (cfg.d_model, cfg.num_experts)),
+        "w_gate": jax.random.normal(key, (cfg.num_experts, cfg.d_model,
+                                          cfg.d_ff)) * 0.05,
+        "w_up": jax.random.normal(key, (cfg.num_experts, cfg.d_model,
+                                        cfg.d_ff)) * 0.05,
+        "w_down": jax.random.normal(key, (cfg.num_experts, cfg.d_ff,
+                                          cfg.d_model)) * 0.05,
+    }
+    x = jax.random.normal(key, (2, 16, cfg.d_model))
+    out, aux, counts = moe_lib.moe_ffn(p, x, cfg)
+    assert out.shape == x.shape
+    assert counts.shape == (cfg.num_experts,)
+    # every token routes to exactly k experts (no drops at cf=1.25, T=32)
+    assert int(counts.sum()) <= 32 * cfg.experts_per_token
+    assert float(aux) > 0
+
+
+def test_moe_capacity_drops_overflow():
+    cfg = reduced(get_config("dbrx-132b"))
+    cfg = dataclasses.replace(cfg, moe_capacity_factor=0.1)
+    key = jax.random.PRNGKey(6)
+    p = {
+        "router": jax.random.normal(key, (cfg.d_model, cfg.num_experts)),
+        "w_gate": jnp.ones((cfg.num_experts, cfg.d_model, cfg.d_ff)) * .01,
+        "w_up": jnp.ones((cfg.num_experts, cfg.d_model, cfg.d_ff)) * .01,
+        "w_down": jnp.ones((cfg.num_experts, cfg.d_ff, cfg.d_model)) * .01,
+    }
+    x = jax.random.normal(key, (2, 32, cfg.d_model))
+    out, _, counts = moe_lib.moe_ffn(p, x, cfg)
+    cap = moe_lib.moe_capacity(64, cfg)
+    assert int(counts.max()) <= cap
+    assert not jnp.isnan(out).any()

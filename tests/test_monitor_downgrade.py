@@ -1,0 +1,128 @@
+"""Progressive validation metrics and domino downgrade behaviour."""
+
+import numpy as np
+import pytest
+
+from repro.configs.weips_ctr import LR_FTRL
+from repro.core import ClusterConfig, WeiPSCluster
+from repro.core.downgrade import SmoothedThresholdTrigger
+from repro.core.monitor import ProgressiveValidator, auc, logloss
+from repro.data import ClickStream
+
+
+def test_auc_reference_cases():
+    y = np.array([0, 0, 1, 1], dtype=np.float32)
+    assert auc(y, np.array([0.1, 0.2, 0.8, 0.9])) == 1.0
+    assert auc(y, np.array([0.9, 0.8, 0.2, 0.1])) == 0.0
+    assert auc(y, np.array([0.5, 0.5, 0.5, 0.5])) == pytest.approx(0.5)
+    # matches the probabilistic definition on random data
+    rng = np.random.default_rng(0)
+    y = (rng.random(500) < 0.3).astype(np.float32)
+    p = rng.random(500)
+    pairs = [(pi, pj) for pi, yi in zip(p, y) for pj, yj in zip(p, y)
+             if yi == 1 and yj == 0]
+    want = np.mean([1.0 if a > b else (0.5 if a == b else 0.0)
+                    for a, b in pairs])
+    assert auc(y, p) == pytest.approx(want, abs=1e-9)
+
+
+def test_logloss_sanity():
+    y = np.array([1, 0], np.float32)
+    assert logloss(y, np.array([0.9, 0.1])) < logloss(y, np.array([0.5, 0.5]))
+
+
+def test_progressive_validation_is_pre_update():
+    """The metric for step t is computed with the params BEFORE step t's
+    gradient — so a model that memorizes batch t only shows it at t+1."""
+    cl = WeiPSCluster(LR_FTRL, ClusterConfig(
+        num_master=2, num_slave=1, num_replicas=1, num_partitions=2))
+    ids = np.tile(np.arange(LR_FTRL.fields, dtype=np.int64), (32, 1))
+    y = np.ones(32, np.float32)
+    ms = [cl.train_on_batch(ids, y, now=float(i)) for i in range(6)]
+    # first observation is the prior (p=0.5): the metric for step t is
+    # computed BEFORE step t's update; later ones reflect learning (FTRL
+    # needs a few steps for |z| to clear the l1 threshold)
+    assert ms[0]["pctr"] == pytest.approx(0.5, abs=1e-6)
+    assert ms[-1]["pctr"] > ms[0]["pctr"]
+
+
+def test_smoothed_trigger_suppresses_single_spike():
+    v = ProgressiveValidator()
+    trig = SmoothedThresholdTrigger(metric="logloss", threshold=1.0,
+                                    window=5, min_points=5)
+    rng = np.random.default_rng(0)
+    y = (rng.random(64) < 0.5).astype(np.float32)
+    good = np.clip(y * 0.8 + 0.1, 0.01, 0.99)
+    for i in range(6):
+        v.observe(float(i), i, y, good)
+    assert not trig.check(v)
+    # one bad batch — smoothed metric must NOT trigger
+    v.observe(6.0, 6, y, 1.0 - good)
+    assert not trig.check(v)
+    # sustained collapse — must trigger
+    for i in range(7, 13):
+        v.observe(float(i), i, y, 1.0 - good)
+    assert trig.check(v)
+
+
+def test_domino_downgrade_restores_serving_quality():
+    """Corrupt the master post-checkpoint; the downgrade hot-switches the
+    slaves back to the stable version (with queue offsets from the ckpt)."""
+    cl = WeiPSCluster(LR_FTRL, ClusterConfig(
+        num_master=2, num_slave=2, num_replicas=1, num_partitions=4,
+        downgrade_threshold=1.0, downgrade_window=4))
+    stream = ClickStream(feature_space=1 << 10, fields=LR_FTRL.fields,
+                         seed=3)
+    now = 0.0
+    for i in range(15):
+        ids, y = stream.batch(64)
+        cl.train_on_batch(ids, y, now=now)
+        cl.sync_tick(now)
+        now += 0.5
+    v_good = cl.checkpoint(now)
+    ids_eval, y_eval = stream.batch(256)
+    p_good = cl.predict(ids_eval)
+
+    # poison the master state (simulates a corrupted update burst)
+    for m in cl.masters:
+        t = m.tables["w"]
+        all_ids = t.all_ids()
+        if len(all_ids):
+            w, slots = t.gather(all_ids)
+            slots["z"] = slots["z"] + 100.0
+            t.scatter(all_ids, w, slots)
+            m.collector.record("w", all_ids, "upsert")
+    cl.sync_tick(now + 1)
+    p_bad = cl.predict(ids_eval)
+    assert np.abs(p_bad - p_good).max() > 0.1     # serving visibly degraded
+
+    v = cl.downgrader.execute(now + 2, version=v_good)
+    assert v == v_good
+    p_restored = cl.predict(ids_eval)
+    np.testing.assert_allclose(p_restored, p_good, atol=5e-3)
+
+
+def test_auto_downgrade_on_metric_collapse():
+    import dataclasses
+    cfg = dataclasses.replace(LR_FTRL, ftrl_l1=0.01, ftrl_alpha=0.3)
+    cl = WeiPSCluster(cfg, ClusterConfig(
+        num_master=2, num_slave=1, num_replicas=1, num_partitions=2,
+        downgrade_metric="logloss", downgrade_threshold=0.72,
+        downgrade_window=3))
+    stream = ClickStream(feature_space=1 << 8, fields=cfg.fields,
+                         signal_scale=1.0)
+    now = 0.0
+    for i in range(30):
+        ids, y = stream.batch(128)
+        cl.train_on_batch(ids, y, now=now)
+        cl.sync_tick(now)
+        now += 0.5
+    cl.checkpoint(now)
+    assert cl.downgrade_check(now) is None        # healthy: no downgrade
+    stream.corrupt(scale=2.0)                     # adversarial sign flip
+    for i in range(8):
+        ids, y = stream.batch(128)
+        cl.train_on_batch(ids, y, now=now)
+        now += 0.5
+    assert cl.downgrade_check(now) is not None    # trigger fired
+    assert len(cl.downgrader.downgrades) == 1

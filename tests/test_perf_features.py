@@ -1,0 +1,127 @@
+"""Correctness of the §Perf beyond-paper features: chunked CE, grouped MoE
+dispatch, context-parallel attention flag, sort-based positions."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import init_params
+from repro.models import moe as moe_lib
+from repro.training.trainer import loss_fn
+
+
+def test_chunked_ce_matches_monolithic_values_and_grads():
+    cfg = reduced(get_config("qwen2-7b"))
+    cfg_c = dataclasses.replace(cfg, loss_chunk=8)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 33),
+                                          0, cfg.vocab_size)}
+    l1, _ = loss_fn(params, cfg, batch)
+    l2, _ = loss_fn(params, cfg_c, batch)
+    assert abs(float(l1) - float(l2)) < 1e-4
+    g1 = jax.grad(lambda p: loss_fn(p, cfg, batch)[0])(params)
+    g2 = jax.grad(lambda p: loss_fn(p, cfg_c, batch)[0])(params)
+    errs = jax.tree.map(lambda a, b: float(jnp.abs(a - b).max()), g1, g2)
+    assert max(jax.tree.leaves(errs)) < 1e-5
+
+
+def _moe_params(cfg, key):
+    return {
+        "router": jax.random.normal(key, (cfg.d_model, cfg.num_experts)),
+        "w_gate": jax.random.normal(key, (cfg.num_experts, cfg.d_model,
+                                          cfg.d_ff)) * 0.05,
+        "w_up": jax.random.normal(key, (cfg.num_experts, cfg.d_model,
+                                        cfg.d_ff)) * 0.05,
+        "w_down": jax.random.normal(key, (cfg.num_experts, cfg.d_ff,
+                                          cfg.d_model)) * 0.05,
+    }
+
+
+@pytest.mark.parametrize("groups", [2, 4])
+def test_grouped_dispatch_matches_flat_with_ample_capacity(groups):
+    cfg = dataclasses.replace(reduced(get_config("dbrx-132b")),
+                              moe_capacity_factor=8.0)
+    cfg_g = dataclasses.replace(cfg, moe_dispatch_groups=groups)
+    key = jax.random.PRNGKey(0)
+    p = _moe_params(cfg, key)
+    x = jax.random.normal(key, (4, 16, cfg.d_model))
+    o1, a1, c1 = moe_lib.moe_ffn(p, x, cfg)
+    o2, a2, c2 = moe_lib.moe_ffn(p, x, cfg_g)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+
+
+def test_sorted_positions_first_come_first_served():
+    """Stable-sort positions preserve arrival order within each expert —
+    the capacity drop semantics of the cumsum formulation."""
+    flat_e = jnp.array([3, 1, 3, 3, 0, 1, 3], jnp.int32)
+    pos = moe_lib._slot_positions(flat_e, 4)
+    np.testing.assert_array_equal(np.asarray(pos), [0, 0, 1, 2, 0, 1, 3])
+
+
+def test_context_parallel_flag_is_noop_without_mesh():
+    """cp-attention adds constraints only; math unchanged (no mesh here,
+    UNCONSTRAINED specs are inert on a single device)."""
+    cfg = reduced(get_config("qwen1.5-4b"))
+    cfg_cp = dataclasses.replace(cfg, context_parallel_attn=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 16),
+                                          0, cfg.vocab_size)}
+    l1, _ = loss_fn(params, cfg, batch)
+    l2, _ = loss_fn(params, cfg_cp, batch)
+    assert abs(float(l1) - float(l2)) < 1e-6
+
+
+def test_cumulative_expert_tracking_under_adam():
+    """Momentum keeps updating experts routed-to in earlier windows; the
+    engine's cumulative mode keeps the replica exact."""
+    from repro.core.sync_engine import ModelSyncEngine, SyncConfig
+    from repro.training import init_train_state, make_train_step
+
+    cfg = dataclasses.replace(reduced(get_config("granite-moe-3b-a800m")),
+                              num_experts=16, experts_per_token=2, d_ff=64)
+    assert cfg.optimizer == "adam"
+    state = init_train_state(cfg, jax.random.PRNGKey(0))
+    step = make_train_step(cfg, donate=False)
+    engine = ModelSyncEngine(cfg, state.params, SyncConfig(
+        gather_mode="period", period=1.0, codec="identity"))
+    assert engine._embed_mode == "cumulative"
+    rng = np.random.default_rng(0)
+    for t in range(8):
+        tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 8)),
+                             jnp.int32)
+        state, m = step(state, {"tokens": tokens})
+        engine.collect_step(np.asarray(tokens), {
+            "expert_counts_per_layer": jax.tree.map(
+                np.asarray, m["expert_counts_per_layer"])})
+        engine.tick(state.params, now=t * 0.5)
+    engine.tick(state.params, now=1e9)
+    assert engine.replicas[0].staleness(state.params) < 1e-5
+
+
+def test_int8_kv_cache_decode_close_to_forward():
+    """Quantized serving cache: decode matches full forward to the int8
+    quantization tolerance (the fit-enabler for 90B decode — §Perf iter 5)."""
+    from repro.models import decode_step, forward, init_cache, init_params
+
+    cfg = reduced(get_config("qwen2-7b"))
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    B, S = 2, 16
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0,
+                                cfg.vocab_size)
+    full, _ = forward(params, cfg, tokens)
+    cache = init_cache(cfg, B, S, dtype=jnp.float32, kv_quant=True)
+    step = jax.jit(lambda c, t, p: decode_step(params, cfg, c, t, p))
+    worst = 0.0
+    for t in range(S):
+        lg, cache = step(cache, tokens[:, t:t + 1],
+                         jnp.full((B,), t, jnp.int32))
+        worst = max(worst, float(jnp.abs(
+            lg[:, :cfg.vocab_size] - full[:, t, :cfg.vocab_size]).max()))
+    assert worst < 0.3              # logit error bounded by int8 scales
+    assert cache["segments"][0]["pos0"]["k"].dtype == jnp.int8

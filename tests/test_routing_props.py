@@ -1,0 +1,65 @@
+"""Property-based tests (hypothesis) for the routing/partition invariants
+the WeiPS consistency story depends on."""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import RoutingPlan, reshard_plan
+
+ids_strategy = st.lists(st.integers(min_value=0, max_value=2 ** 62),
+                        min_size=1, max_size=200).map(
+                            lambda xs: np.asarray(xs, dtype=np.int64))
+
+
+@given(ids=ids_strategy,
+       num_master=st.integers(1, 7),
+       num_slave=st.integers(1, 5),
+       mult=st.integers(1, 4))
+@settings(max_examples=50, deadline=None)
+def test_partition_congruence(ids, num_master, num_slave, mult):
+    """partition(id) % num_slave == slave_shard(id): a slave consuming only
+    partitions p with p % S == s sees exactly its own IDs — no filtering
+    loss, no cross-delivery."""
+    plan = RoutingPlan(num_master, num_slave, num_slave * mult)
+    part = plan.partition(ids)
+    slave = plan.slave_shard(ids)
+    np.testing.assert_array_equal(part % num_slave, slave)
+
+
+@given(ids=ids_strategy, num_master=st.integers(1, 7),
+       num_slave=st.integers(1, 5))
+@settings(max_examples=50, deadline=None)
+def test_split_by_master_is_partition(ids, num_master, num_slave):
+    plan = RoutingPlan(num_master, num_slave, num_slave)
+    split = plan.split_by_master(np.unique(ids))
+    together = np.concatenate(list(split.values())) if split else ids[:0]
+    assert sorted(together.tolist()) == sorted(np.unique(ids).tolist())
+    for shard, sids in split.items():
+        np.testing.assert_array_equal(plan.master_shard(sids), shard)
+
+
+@given(ids=ids_strategy, src=st.integers(1, 6), dst=st.integers(1, 6))
+@settings(max_examples=50, deadline=None)
+def test_reshard_plan_is_partition(ids, src, dst):
+    """Checkpoint migration N->M shards moves every id exactly once."""
+    uniq = np.unique(ids)
+    plan = reshard_plan(uniq, src, dst)
+    moved = np.concatenate(list(plan.values())) if plan else uniq[:0]
+    assert sorted(moved.tolist()) == sorted(uniq.tolist())
+
+
+@given(ids=ids_strategy)
+@settings(max_examples=30, deadline=None)
+def test_routing_determinism(ids):
+    plan = RoutingPlan(4, 2, 8)
+    np.testing.assert_array_equal(plan.partition(ids), plan.partition(ids))
+
+
+@given(num_slave=st.integers(1, 8), mult=st.integers(1, 3))
+@settings(max_examples=30, deadline=None)
+def test_partitions_for_slave_cover_exactly(num_slave, mult):
+    plan = RoutingPlan(2, num_slave, num_slave * mult)
+    all_parts = sorted(
+        p for s in range(num_slave) for p in plan.partitions_for_slave(s))
+    assert all_parts == list(range(plan.num_partitions))

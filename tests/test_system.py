@@ -1,0 +1,106 @@
+"""End-to-end behaviour of the full WeiPS system (paper workflow):
+online learning on a drifting click stream with second-level deployment,
+consistency between the training and serving planes, and learning progress
+visible through progressive validation."""
+
+import numpy as np
+import pytest
+
+from repro.configs.weips_ctr import CTR_CONFIGS, DNN_ADAM, FM_FTRL, LR_FTRL
+from repro.core import ClusterConfig, WeiPSCluster
+from repro.data import ClickStream
+
+
+@pytest.mark.parametrize("model", ["weips-lr-ftrl", "weips-fm-ftrl",
+                                   "weips-fm-sgd", "weips-dnn-adam"])
+def test_online_learning_improves(model):
+    cfg = CTR_CONFIGS[model]
+    cl = WeiPSCluster(cfg, ClusterConfig(
+        num_master=2, num_slave=2, num_replicas=1, num_partitions=4))
+    stream = ClickStream(feature_space=1 << 12, fields=cfg.fields, seed=0)
+    for i in range(40):
+        ids, y = stream.batch(128)
+        cl.train_on_batch(ids, y, now=i * 0.1)
+        cl.sync_tick(i * 0.1)
+    early = np.mean([p.values["logloss"] for p in cl.validator.history[:5]])
+    late = np.mean([p.values["logloss"] for p in cl.validator.history[-5:]])
+    assert late < early, f"{model}: no learning progress ({early}->{late})"
+
+
+def test_training_and_serving_agree_after_sync():
+    """Fusion consistency: the predictor (slave path) and trainer (master
+    path) produce the same predictions once the stream quiesces."""
+    cl = WeiPSCluster(FM_FTRL, ClusterConfig(
+        num_master=3, num_slave=2, num_replicas=2, num_partitions=4))
+    stream = ClickStream(feature_space=1 << 12, fields=FM_FTRL.fields)
+    for i in range(20):
+        ids, y = stream.batch(64)
+        cl.train_on_batch(ids, y, now=float(i))
+        cl.sync_tick(float(i))
+    ids, _ = stream.batch(64)
+    p_serve = cl.predict(ids)
+    rows, _, _ = cl._pull_rows(ids)
+    import jax.numpy as jnp
+    p_train = np.asarray(cl._predict(
+        {k: jnp.asarray(v) for k, v in rows.items()},
+        {k: jnp.asarray(v) for k, v in cl.dense.items()}))
+    np.testing.assert_allclose(p_serve, p_train, rtol=1e-4, atol=1e-5)
+
+
+def test_second_level_deployment_lag():
+    """With realtime gather, serving lag is bounded by one tick (the
+    paper's second-level deployment claim, in simulated seconds)."""
+    cl = WeiPSCluster(LR_FTRL, ClusterConfig(
+        num_master=2, num_slave=1, num_replicas=1, num_partitions=2,
+        gather_mode="realtime"))
+    stream = ClickStream(feature_space=1 << 10, fields=LR_FTRL.fields)
+    tick = 0.2
+    for i in range(10):
+        ids, y = stream.batch(32)
+        cl.train_on_batch(ids, y, now=i * tick)
+        cl.sync_tick(i * tick)
+    m = cl.sync_metrics(now=9 * tick)
+    assert m["sync_lag_seconds"] <= tick + 1e-9
+
+
+def test_gather_mode_bandwidth_vs_lag_tradeoff():
+    """Period gather trades lag for bandwidth (dedup): longer period ->
+    fewer bytes pushed, higher dedup ratio."""
+    def run(mode, period):
+        cl = WeiPSCluster(LR_FTRL, ClusterConfig(
+            num_master=2, num_slave=1, num_replicas=1, num_partitions=2,
+            gather_mode=mode, gather_period=period))
+        stream = ClickStream(feature_space=1 << 10,
+                             fields=LR_FTRL.fields, seed=1)
+        now = 0.0
+        for i in range(30):
+            ids, y = stream.batch(64)
+            cl.train_on_batch(ids, y, now=now)
+            cl.sync_tick(now)
+            now += 0.1
+        cl.sync_tick(now + period + 0.1)  # final flush
+        return cl.sync_metrics(now)
+
+    rt = run("realtime", 0.0)
+    slow = run("period", 1.0)
+    assert slow["pushed_bytes"] < rt["pushed_bytes"]
+    assert slow["dedup_ratio"] > rt["dedup_ratio"]
+
+
+def test_feature_expiry_streams_deletes():
+    cl = WeiPSCluster(LR_FTRL, ClusterConfig(
+        num_master=2, num_slave=1, num_replicas=1, num_partitions=2,
+        feature_ttl_steps=2))
+    stream = ClickStream(feature_space=1 << 10, fields=LR_FTRL.fields)
+    ids0, y0 = stream.batch(32)
+    cl.train_on_batch(ids0, y0, now=0.0)
+    cl.sync_tick(0.0)
+    # many steps with different features -> originals expire
+    for i in range(1, 8):
+        ids, y = stream.batch(32)
+        cl.train_on_batch(ids, y, now=float(i))
+    n_expired = cl.expire_features(now=8.0)
+    cl.sync_tick(8.0)
+    assert n_expired > 0
+    total_rows = sum(len(m.tables["w"]) for m in cl.masters)
+    assert total_rows < 32 * LR_FTRL.fields * 8     # bounded model size

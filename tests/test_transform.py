@@ -1,0 +1,71 @@
+"""Model transformation properties: FTRL heterogeneous-parameter derivation
+and codec error bounds (hypothesis)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core import (Cast16Transform, Int8Transform, Record, Transform,
+                        decode_record, make_transform)
+from repro.optim import FTRL
+
+rows = hnp.arrays(np.float32, hnp.array_shapes(min_dims=2, max_dims=2,
+                                               min_side=1, max_side=32),
+                  elements=st.floats(-100, 100, width=32))
+
+
+@given(w=rows)
+@settings(max_examples=40, deadline=None)
+def test_identity_roundtrip(w):
+    t = Transform()
+    rec = Record("g", "upsert", np.arange(len(w)), t.encode(w, {}), 0, 0,
+                 meta={"codec": t.name})
+    np.testing.assert_array_equal(decode_record(rec), w)
+
+
+@given(w=rows)
+@settings(max_examples=40, deadline=None)
+def test_cast16_error_bound(w):
+    t = Cast16Transform()
+    rec = Record("g", "upsert", np.arange(len(w)), t.encode(w, {}), 0, 0,
+                 meta={"codec": t.name})
+    got = decode_record(rec)
+    np.testing.assert_allclose(got, w, rtol=1e-3, atol=1e-4)
+
+
+@given(w=rows)
+@settings(max_examples=40, deadline=None)
+def test_int8_error_bound(w):
+    """Row-wise absmax int8: |err| <= absmax_row / 254 (half a quant step)
+    + eps."""
+    t = Int8Transform()
+    rec = Record("g", "upsert", np.arange(len(w)), t.encode(w, {}), 0, 0,
+                 meta={"codec": t.name})
+    got = decode_record(rec)
+    bound = np.abs(w).max(axis=-1, keepdims=True) / 254.0 + 1e-6
+    assert np.all(np.abs(got - w) <= bound + 1e-6)
+
+
+@given(w=rows)
+@settings(max_examples=20, deadline=None)
+def test_int8_halves_wire_bytes_vs_cast16(w):
+    i8 = Int8Transform().encode(w, {})
+    c16 = Cast16Transform().encode(w, {})
+    if w.shape[1] >= 8:       # scale overhead amortized
+        assert Int8Transform().payload_bytes(i8) < \
+            Cast16Transform().payload_bytes(c16)
+
+
+def test_ftrl_transform_derives_w():
+    opt = FTRL(alpha=0.1, beta=1.0, l1=0.5, l2=1.0)
+    t = make_transform("identity", opt)
+    z = np.array([[3.0, -2.0, 0.1, 0.0]], np.float32)
+    n = np.array([[4.0, 1.0, 9.0, 0.0]], np.float32)
+    w_stored = np.zeros((1, 4), np.float32)
+    got = t.serve_values(w_stored, {"z": z, "n": n})
+    want = np.asarray(opt.weights_from(jnp.asarray(z), jnp.asarray(n)))
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+    assert got[0, 2] == 0.0          # |z| <= l1 -> sparsified to exactly 0
+    assert got[0, 0] != 0.0
