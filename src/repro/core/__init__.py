@@ -3,6 +3,7 @@ parameter plane (master) and serving parameter plane (slave) via streaming
 synchronization, with multi-level fault tolerance and domino downgrade."""
 
 from repro.core.cluster import ClusterConfig, WeiPSCluster
+from repro.core.hashmap import IdHashMap
 from repro.core.ps import DenseBank, MasterShard, SlaveShard, SparseTable
 from repro.core.queue import Consumer, PartitionedQueue, Record
 from repro.core.routing import RoutingPlan, reshard_plan
@@ -12,7 +13,8 @@ from repro.core.transform import (Cast16Transform, Int8Transform, Transform,
                                   decode_record, make_transform)
 
 __all__ = [
-    "ClusterConfig", "WeiPSCluster", "DenseBank", "MasterShard", "SlaveShard",
+    "ClusterConfig", "WeiPSCluster", "DenseBank", "IdHashMap", "MasterShard",
+    "SlaveShard",
     "SparseTable", "Consumer", "PartitionedQueue", "Record", "RoutingPlan",
     "reshard_plan", "Collector", "Gatherer", "Pusher", "Scatter",
     "SyncPipeline", "Cast16Transform", "Int8Transform", "Transform",

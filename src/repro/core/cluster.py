@@ -59,6 +59,7 @@ class ClusterConfig:
     downgrade_window: int = 10
     feature_min_count: int = 1
     feature_ttl_steps: int = 100_000
+    ps_backend: str = "numpy"    # numpy | pallas (sparse-row engine)
     seed: int = 0
 
 
@@ -77,7 +78,8 @@ class WeiPSCluster:
         self.filter = FeatureFilter(c.feature_min_count, c.feature_ttl_steps)
 
         # ---- training plane -------------------------------------------
-        self.masters = [MasterShard(i, self.groups, self.optimizer)
+        self.masters = [MasterShard(i, self.groups, self.optimizer,
+                                    backend=c.ps_backend)
                         for i in range(c.num_master)]
         self.collectors = []
         self.gatherers = []
@@ -107,7 +109,7 @@ class WeiPSCluster:
         for sid in range(c.num_slave):
             replicas = []
             for rid in range(c.num_replicas):
-                shard = SlaveShard(sid, self.groups)
+                shard = SlaveShard(sid, self.groups, backend=c.ps_backend)
                 replicas.append(shard)
                 self.scatters.append(Scatter(shard, self.queue, self.plan))
                 self.scheduler.register(ComponentInfo("slave", sid, rid))
@@ -281,7 +283,8 @@ class WeiPSCluster:
             for shard in rs.replicas:
                 for g, dim in self.groups.items():
                     from repro.core.ps import SparseTable
-                    shard.tables[g] = SparseTable(dim)
+                    shard.tables[g] = SparseTable(
+                        dim, backend=self.ccfg.ps_backend)
                 shard._applied_seq = {}
         for snap in ckpt.shard_snaps.values():
             for g, tsnap in snap["tables"].items():

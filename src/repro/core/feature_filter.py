@@ -4,6 +4,10 @@ Admission: probabilistic / count-threshold entry so one-off junk features
 never allocate PS rows. Expiry: rows untouched for ``ttl_steps`` are
 deleted — and the deletion is *streamed* to slaves (the sync mechanism must
 support parameter deletion, §4.1c).
+
+Both paths are batched: admission counts live in a vectorized
+``IdHashMap`` (id → running count) and expiry is one masked scan over the
+table's ``last_touch`` column — no per-id Python.
 """
 
 from __future__ import annotations
@@ -12,30 +16,31 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.core.hashmap import IdHashMap
+
 
 @dataclass
 class FeatureFilter:
     min_count: int = 1            # admissions below this never create rows
     ttl_steps: int = 10_000       # expiry horizon (in master steps)
-    seen: dict = field(default_factory=dict)
+    counts: IdHashMap = field(default_factory=IdHashMap)
 
     def admit(self, ids: np.ndarray) -> np.ndarray:
-        """Returns the subset of ids admitted for row creation."""
+        """Returns the unique ids admitted for row creation: those whose
+        cumulative observation count has reached ``min_count``."""
+        ids = np.asarray(ids, dtype=np.int64)
         if self.min_count <= 1:
             return ids
-        out = []
-        for rid in np.asarray(ids).tolist():
-            c = self.seen.get(rid, 0) + 1
-            self.seen[rid] = c
-            if c >= self.min_count:
-                out.append(rid)
-        return np.asarray(out, dtype=np.int64)
+        uniq, batch_counts = np.unique(ids, return_counts=True)
+        total = self.counts.lookup(uniq, default=0) + batch_counts
+        self.counts.put(uniq, total)
+        return uniq[total >= self.min_count]
 
     def expired(self, table, step: int) -> np.ndarray:
         """IDs whose last touch is older than ttl_steps."""
         ids = table.all_ids()
         if len(ids) == 0:
             return ids
-        sl = table._lookup(ids)
+        sl = table.lookup(ids)
         stale = table.last_touch[sl] < (step - self.ttl_steps)
         return ids[stale]

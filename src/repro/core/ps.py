@@ -5,32 +5,56 @@ Master shards hold *training* state: parameter rows plus optimizer slots
 (FTRL ``z,n``, Adam ``m,v``, ...). Slave shards hold *serving* state only:
 the transformed inference weights — the paper's heterogeneous-parameter
 split (§1.2.1).
+
+The row hot path is fully batched: ID→slot resolution goes through a
+vectorized open-addressing hash map (``core.hashmap.IdHashMap``) and row
+gather/update/scatter are single fancy-indexed (or Pallas-kernel) passes —
+no per-row Python anywhere. ``backend`` selects the row engine:
+
+  * ``"numpy"``  — NumPy fancy indexing; the reference path, and the fast
+    path on CPU-only hosts.
+  * ``"pallas"`` — batched gather through the ``embedding_lookup`` Pallas
+    kernel (interpret mode off-TPU, Mosaic on TPU); FTRL row updates fuse
+    through ``ftrl_row_update`` (see ``Optimizer.update_rows``).
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, Optional
+from typing import Optional
 
 import numpy as np
 
+from repro.core.hashmap import EMPTY as _NO_ID
+from repro.core.hashmap import IdHashMap
 from repro.optim import Optimizer
+
+PS_BACKENDS = ("numpy", "pallas")
 
 
 class SparseTable:
     """Row-addressable table over a huge hashed ID space; only touched rows
-    exist. Arena storage: a growable (capacity, dim) array + id→slot map,
-    so batched gather/scatter are vectorized."""
+    exist. Arena storage: a growable (capacity, dim) array + a vectorized
+    id→slot hash map, so batched ``ensure``/``lookup``/``evict`` and
+    gather/scatter run with no per-row loops."""
 
     def __init__(self, dim: int, slot_names: tuple[str, ...] = (),
-                 init_capacity: int = 1024, dtype=np.float32):
+                 init_capacity: int = 1024, dtype=np.float32,
+                 backend: str = "numpy"):
+        assert backend in PS_BACKENDS, f"backend must be one of {PS_BACKENDS}"
         self.dim = dim
         self.dtype = dtype
+        self.backend = backend
         self.slot_names = tuple(slot_names)
-        self._slot_of: dict[int, int] = {}
-        self._id_of: list[int] = []
-        self._free: list[int] = []
-        cap = init_capacity
+        self._map = IdHashMap(init_capacity)
+        cap = max(1, init_capacity)
+        # reverse map slot→id; _NO_ID (a reserved key sentinel, so it can
+        # never collide with a real id — ids like -1 are legal) marks
+        # unused slots. all_ids() scans this instead of the (4× larger)
+        # hash-map key array.
+        self._id_of = np.full(cap, _NO_ID, dtype=np.int64)
+        self._free = np.empty(0, dtype=np.int64)
+        self._top = 0                     # next never-used arena slot
         self._w = np.zeros((cap, dim), dtype=dtype)
         self._slots = {n: np.zeros((cap, dim), dtype=np.float32)
                        for n in self.slot_names}
@@ -39,76 +63,101 @@ class SparseTable:
 
     # -- capacity ---------------------------------------------------------
     def __len__(self) -> int:
-        return len(self._slot_of)
+        return len(self._map)
 
     def _grow(self, need: int) -> None:
         cap = self._w.shape[0]
         new_cap = max(need, cap * 2)
-        def grow(a):
-            out = np.zeros((new_cap,) + a.shape[1:], dtype=a.dtype)
+        def grow(a, fill=0):
+            out = np.full((new_cap,) + a.shape[1:], fill, dtype=a.dtype)
             out[:cap] = a
             return out
         self._w = grow(self._w)
         self._slots = {n: grow(a) for n, a in self._slots.items()}
+        self._id_of = grow(self._id_of, fill=_NO_ID)
         self.last_touch = grow(self.last_touch)
         self.touch_count = grow(self.touch_count)
 
-    def _ensure(self, ids: np.ndarray) -> np.ndarray:
-        """Returns arena slots for ids, creating rows as needed."""
-        slots = np.empty(len(ids), dtype=np.int64)
-        for i, rid in enumerate(ids.tolist()):
-            s = self._slot_of.get(rid)
-            if s is None:
-                if self._free:
-                    s = self._free.pop()
-                else:
-                    s = len(self._id_of)
-                    self._id_of.append(-1)
-                    if s >= self._w.shape[0]:
-                        self._grow(s + 1)
-                    # (slot was appended; arena may already be large enough)
-                self._slot_of[rid] = s
-                if s >= len(self._id_of):
-                    self._id_of.extend([-1] * (s + 1 - len(self._id_of)))
-                self._id_of[s] = rid
-                self._w[s] = 0.0
-                for a in self._slots.values():
-                    a[s] = 0.0
-                self.last_touch[s] = 0
-                self.touch_count[s] = 0
-            slots[i] = s
-        return slots
+    def _alloc_slots(self, k: int) -> np.ndarray:
+        """Pop ``k`` arena slots: freed slots first (LIFO), then fresh."""
+        out = np.empty(k, dtype=np.int64)
+        take = min(k, len(self._free))
+        if take:
+            out[:take] = self._free[len(self._free) - take:][::-1]
+            self._free = self._free[:len(self._free) - take]
+        fresh = k - take
+        if fresh:
+            out[take:] = np.arange(self._top, self._top + fresh)
+            self._top += fresh
+            if self._top > self._w.shape[0]:
+                self._grow(self._top)
+        return out
 
-    def _lookup(self, ids: np.ndarray) -> np.ndarray:
-        """Slots for existing ids; -1 where missing."""
-        return np.array([self._slot_of.get(r, -1) for r in ids.tolist()],
-                        dtype=np.int64)
-
-    # -- access -------------------------------------------------------------
-    def gather(self, ids: np.ndarray, *, create: bool = False):
-        """Returns (w (n,dim), slots dict name->(n,dim)). Missing rows are
-        zeros unless ``create``."""
+    # -- id resolution (batched, no per-row Python) -----------------------
+    def ensure(self, ids: np.ndarray) -> np.ndarray:
+        """Arena slots for ids, creating zeroed rows as needed. Lookup-first
+        so the hot path (all rows exist) is a single batched probe — no
+        dedup sort, no insert machinery."""
         ids = np.asarray(ids, dtype=np.int64)
-        if create:
-            sl = self._ensure(ids)
-            w = self._w[sl].copy()
-            slots = {n: a[sl].copy() for n, a in self._slots.items()}
-        else:
-            sl = self._lookup(ids)
-            ok = sl >= 0
-            w = np.zeros((len(ids), self.dim), dtype=self.dtype)
-            w[ok] = self._w[sl[ok]]
-            slots = {}
-            for n, a in self._slots.items():
-                v = np.zeros((len(ids), self.dim), dtype=np.float32)
-                v[ok] = a[sl[ok]]
-                slots[n] = v
+        sl, found = self._map.lookup_mask(ids)
+        if not found.all():
+            sl = self._fill_missing(ids, sl, found)
+        return sl
+
+    def _fill_missing(self, ids: np.ndarray, sl: np.ndarray,
+                      found: np.ndarray) -> np.ndarray:
+        """Create zeroed rows for the ids ``found`` marks absent, patching
+        their entries in ``sl`` (callers pass the probe result they already
+        hold, so the miss path costs one probe, not two)."""
+        miss = ~found
+        new_ids = np.unique(ids[miss])            # sorted unique
+        new_sl = self._alloc_slots(len(new_ids))
+        self._map.insert(new_ids, new_sl)
+        self._id_of[new_sl] = new_ids
+        self._w[new_sl] = 0.0
+        for a in self._slots.values():
+            a[new_sl] = 0.0
+        self.last_touch[new_sl] = 0
+        self.touch_count[new_sl] = 0
+        sl[miss] = new_sl[np.searchsorted(new_ids, ids[miss])]
+        return sl
+
+    def lookup(self, ids: np.ndarray) -> np.ndarray:
+        """Slots for existing ids; -1 where missing."""
+        return self._map.lookup(np.asarray(ids, dtype=np.int64))
+
+    def evict(self, ids: np.ndarray) -> int:
+        """Batched row removal; freed slots are reused by later ensures."""
+        uniq = np.unique(np.asarray(ids, dtype=np.int64))
+        sl = self._map.lookup(uniq)
+        have = sl >= 0
+        if have.any():
+            s = sl[have]
+            self._map.delete(uniq[have])
+            self._id_of[s] = _NO_ID
+            self._free = np.concatenate([self._free, s])
+        return int(have.sum())
+
+    # -- slot-level row access (shared by gather/scatter/apply_batch) -----
+    def _fetch(self, arena: np.ndarray, sl: np.ndarray) -> np.ndarray:
+        if self.backend == "pallas" and len(sl):
+            from repro.kernels import ops
+            out = ops.embedding_lookup(arena, sl.astype(np.int32))
+            return np.asarray(out, dtype=arena.dtype)
+        # take(mode="clip") with in-bounds-by-construction slots: ~an order
+        # faster than arena[sl] (skips the bounds-checked gather path)
+        if arena.shape[1] == 1:      # dim-1 rows (LR): element gather beats
+            return arena.reshape(-1).take(sl, mode="clip")[:, None]  # row memcpys
+        return arena.take(sl, axis=0, mode="clip")
+
+    def read_rows(self, sl: np.ndarray):
+        """(w, slots) for resolved arena slots — backend-routed gather."""
+        w = self._fetch(self._w, sl)
+        slots = {n: self._fetch(a, sl) for n, a in self._slots.items()}
         return w, slots
 
-    def scatter(self, ids: np.ndarray, w: np.ndarray,
-                slots: Optional[dict] = None, *, step: int = 0) -> None:
-        ids = np.asarray(ids, dtype=np.int64)
-        sl = self._ensure(ids)
+    def write_rows(self, sl: np.ndarray, w: np.ndarray,
+                   slots: Optional[dict] = None, *, step: int = 0) -> None:
         self._w[sl] = w
         if slots:
             for n, v in slots.items():
@@ -116,20 +165,34 @@ class SparseTable:
         self.last_touch[sl] = step
         self.touch_count[sl] += 1
 
-    def delete(self, ids: np.ndarray) -> int:
+    # -- access -------------------------------------------------------------
+    def gather(self, ids: np.ndarray, *, create: bool = False):
+        """Returns (w (n,dim), slots dict name->(n,dim)). Missing rows are
+        zeros unless ``create``."""
         ids = np.asarray(ids, dtype=np.int64)
-        n = 0
-        for rid in ids.tolist():
-            s = self._slot_of.pop(rid, None)
-            if s is not None:
-                self._id_of[s] = -1
-                self._free.append(s)
-                n += 1
-        return n
+        if create:
+            sl, found = self._map.lookup_mask(ids)
+            if not found.all():               # rare: rows to create
+                sl = self._fill_missing(ids, sl, found)
+            return self.read_rows(sl)
+        sl = self.lookup(ids)
+        ok = sl >= 0
+        safe = np.where(ok, sl, 0)
+        w = self._fetch(self._w, safe)
+        w = np.where(ok[:, None], w, np.zeros((), dtype=self.dtype))
+        slots = {}
+        for n, a in self._slots.items():
+            v = self._fetch(a, safe)
+            slots[n] = np.where(ok[:, None], v, np.float32(0.0))
+        return w, slots
+
+    def scatter(self, ids: np.ndarray, w: np.ndarray,
+                slots: Optional[dict] = None, *, step: int = 0) -> None:
+        self.write_rows(self.ensure(ids), w, slots, step=step)
 
     def all_ids(self) -> np.ndarray:
-        return np.fromiter(self._slot_of.keys(), dtype=np.int64,
-                           count=len(self._slot_of))
+        live = self._id_of[:self._top]
+        return live[live != _NO_ID]
 
     def nbytes(self) -> int:
         live = len(self)
@@ -139,19 +202,19 @@ class SparseTable:
     # -- snapshot (checkpointing) -------------------------------------------
     def snapshot(self) -> dict:
         ids = self.all_ids()
-        w, slots = self.gather(ids)
-        sl = self._lookup(ids)
+        sl = self.lookup(ids)                     # one probe for everything
+        w, slots = self.read_rows(sl)
         return {"ids": ids, "w": w, "slots": slots,
                 "last_touch": self.last_touch[sl].copy(),
                 "touch_count": self.touch_count[sl].copy()}
 
     @classmethod
     def restore(cls, snap: dict, dim: int, slot_names: tuple[str, ...],
-                dtype=np.float32) -> "SparseTable":
+                dtype=np.float32, backend: str = "numpy") -> "SparseTable":
         t = cls(dim, slot_names, init_capacity=max(16, len(snap["ids"])),
-                dtype=dtype)
-        t.scatter(snap["ids"], snap["w"], snap["slots"])
-        sl = t._lookup(snap["ids"])
+                dtype=dtype, backend=backend)
+        sl = t.ensure(snap["ids"])                # one probe for everything
+        t.write_rows(sl, snap["w"], snap["slots"])
         t.last_touch[sl] = snap["last_touch"]
         t.touch_count[sl] = snap["touch_count"]
         return t
@@ -193,13 +256,16 @@ class MasterShard:
     collector (dirty IDs only — paper §4.1.1)."""
 
     def __init__(self, shard_id: int, groups: dict[str, int],
-                 optimizer: Optimizer, collector=None):
+                 optimizer: Optimizer, collector=None,
+                 backend: str = "numpy"):
         """groups: {group_name: row_dim}"""
         self.shard_id = shard_id
         self.optimizer = optimizer
+        self.backend = backend
         self.tables = {
             g: SparseTable(dim, tuple(sorted(
-                optimizer.init_slots(np.zeros((dim,), np.float32)).keys())))
+                optimizer.init_slots(np.zeros((dim,), np.float32)).keys())),
+                backend=backend)
             for g, dim in groups.items()
         }
         self.dense = DenseBank()
@@ -213,22 +279,46 @@ class MasterShard:
         w, _ = self.tables[group].gather(ids, create=create)
         return w
 
-    def push_grad(self, group: str, ids: np.ndarray, grads: np.ndarray,
-                  *, step: Optional[int] = None) -> None:
-        """Apply gradient rows through the optimizer; record dirty IDs."""
+    def apply_batch(self, group: str, ids: np.ndarray, grads: np.ndarray,
+                    *, step: Optional[int] = None) -> np.ndarray:
+        """The fused PS hot path: one batched hash → gather → optimizer
+        update → scatter pass for a whole minibatch. Duplicate ids are
+        deduplicated with their gradients summed (the correct sparse-grad
+        semantics). Returns the unique ids touched."""
         assert self.alive, f"master shard {self.shard_id} is down"
         t = self.tables[group]
         st = self.step if step is None else step
-        w, slots = t.gather(ids, create=True)
-        import jax.numpy as jnp
-        new_w, new_slots = self.optimizer.update(
-            jnp.asarray(w), {k: jnp.asarray(v) for k, v in slots.items()},
-            jnp.asarray(grads), st)
-        t.scatter(ids, np.asarray(new_w),
-                  {k: np.asarray(v) for k, v in new_slots.items()}, step=st)
+        ids = np.asarray(ids, dtype=np.int64)
+        grads = np.asarray(grads, dtype=np.float32)
+        uniq, inv, counts = np.unique(ids, return_inverse=True,
+                                      return_counts=True)
+        if len(uniq) != len(ids):
+            # segment-sum duplicate-id grads (sort + reduceat: orders of
+            # magnitude faster than np.add.at's buffered scatter-add)
+            order = np.argsort(inv, kind="stable")
+            starts = np.concatenate(([0], np.cumsum(counts)[:-1]))
+            grads = np.add.reduceat(
+                grads.take(order, axis=0, mode="clip"), starts, axis=0)
+        elif len(ids) > 1 and not (ids[1:] >= ids[:-1]).all():
+            # unique but unsorted: slots are resolved for sorted ``uniq``,
+            # so grad rows must be permuted to match
+            grads = grads.take(np.argsort(inv, kind="stable"), axis=0,
+                               mode="clip")
+        sl = t.ensure(uniq)
+        w, slots = t.read_rows(sl)
+        new_w, new_slots = self.optimizer.update_rows(
+            w, slots, grads, st, backend=self.backend)
+        t.write_rows(sl, new_w.astype(t.dtype, copy=False), new_slots,
+                     step=st)
         self.step = st + 1
         if self.collector is not None:
-            self.collector.record(group, ids, "upsert")
+            self.collector.record(group, uniq, "upsert")
+        return uniq
+
+    def push_grad(self, group: str, ids: np.ndarray, grads: np.ndarray,
+                  *, step: Optional[int] = None) -> None:
+        """Apply gradient rows through the optimizer; record dirty IDs."""
+        self.apply_batch(group, ids, grads, step=step)
 
     def push_dense(self, name: str, value: np.ndarray,
                    slots: Optional[dict] = None) -> None:
@@ -239,7 +329,7 @@ class MasterShard:
 
     def delete_rows(self, group: str, ids: np.ndarray) -> None:
         """Feature-filter expiry: remove rows and emit delete records."""
-        self.tables[group].delete(ids)
+        self.tables[group].evict(ids)
         if self.collector is not None:
             self.collector.record(group, ids, "delete")
 
@@ -268,7 +358,8 @@ class MasterShard:
 
     def clear(self) -> None:
         for g, t in list(self.tables.items()):
-            self.tables[g] = SparseTable(t.dim, t.slot_names, dtype=t.dtype)
+            self.tables[g] = SparseTable(t.dim, t.slot_names, dtype=t.dtype,
+                                         backend=t.backend)
         self.dense = DenseBank()
 
 
@@ -276,9 +367,12 @@ class SlaveShard:
     """Serving-side PS shard: inference weights only, idempotent versioned
     application of stream records (last-writer-wins by ``seq``)."""
 
-    def __init__(self, shard_id: int, groups: dict[str, int]):
+    def __init__(self, shard_id: int, groups: dict[str, int],
+                 backend: str = "numpy"):
         self.shard_id = shard_id
-        self.tables = {g: SparseTable(dim) for g, dim in groups.items()}
+        self.backend = backend
+        self.tables = {g: SparseTable(dim, backend=backend)
+                       for g, dim in groups.items()}
         self.dense: dict[str, np.ndarray] = {}
         self.dense_versions: dict[str, int] = {}
         # (group, producer) -> last applied seq, for LWW idempotence
@@ -306,7 +400,7 @@ class SlaveShard:
                 self.dense[name] = decode_record(record)
                 self.dense_versions[name] = ver
         elif record.op == "delete":
-            self.tables[record.group].delete(record.ids)
+            self.tables[record.group].evict(record.ids)
         else:
             values = decode_record(record)
             self.tables[record.group].scatter(record.ids, values)
@@ -326,7 +420,7 @@ class SlaveShard:
         for g, t in other.tables.items():
             snap = t.snapshot()
             self.tables[g] = SparseTable.restore(
-                snap, t.dim, (), dtype=t.dtype)
+                snap, t.dim, (), dtype=t.dtype, backend=self.backend)
         self.dense = {k: v.copy() for k, v in other.dense.items()}
         self.dense_versions = dict(other.dense_versions)
         self._applied_seq = dict(other._applied_seq)

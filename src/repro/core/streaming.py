@@ -75,19 +75,24 @@ class Gatherer:
         self.mode = mode
         self.threshold = threshold
         self.period = period
-        self._pending: dict[tuple[str, str], set[int]] = {}
-        self._pending_count = 0
+        # window state: (group, op) -> list of per-offer unique id arrays.
+        # Offers are O(batch log batch); the cross-offer merge happens once
+        # at flush (amortized-linear, vs per-offer union1d's quadratic
+        # re-merging of the whole window).
+        self._pending: dict[tuple[str, str], list[np.ndarray]] = {}
+        self._pending_count = 0      # pre-merge upper bound on unique ids
         self._last_flush = 0.0
         self.stats = GatherStats()
 
     def offer(self, events: list[tuple[str, np.ndarray, str]]) -> None:
         for group, ids, op in events:
-            key = (group, op)
-            s = self._pending.setdefault(key, set())
-            before = len(s)
-            s.update(ids.tolist())
+            ids = np.asarray(ids, dtype=np.int64)
             self.stats.raw_ids += len(ids)
-            self._pending_count += len(s) - before
+            u = np.unique(ids)
+            self._pending.setdefault((group, op), []).append(u)
+            # upper bound: cross-offer repeats are only collapsed at flush,
+            # so threshold mode can fire slightly early — never late
+            self._pending_count += len(u)
 
     def ready(self, now: float) -> bool:
         if self._pending_count == 0 and not self._pending:
@@ -99,8 +104,12 @@ class Gatherer:
         return (now - self._last_flush) >= self.period
 
     def flush(self, now: float) -> dict[tuple[str, str], np.ndarray]:
-        out = {k: np.fromiter(v, dtype=np.int64, count=len(v))
-               for k, v in self._pending.items() if v}
+        out = {}
+        for k, chunks in self._pending.items():
+            merged = chunks[0] if len(chunks) == 1 else \
+                np.unique(np.concatenate(chunks))
+            if len(merged):
+                out[k] = merged
         self._pending = {}
         self._pending_count = 0
         self._last_flush = now

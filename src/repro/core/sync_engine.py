@@ -121,6 +121,34 @@ class ServeReplica:
         self.applied += 1
         return True
 
+    def apply_batch(self, recs: list) -> int:
+        """Batched application of a poll's worth of records: row-kind
+        records are coalesced per path into ONE fancy-indexed write
+        (concatenation preserves arrival order, so overlapping ids resolve
+        last-writer-wins exactly like sequential ``apply``); dense/expert
+        records keep the singleton path. Returns #records applied."""
+        applied = 0
+        rows_by_path: dict[str, tuple[list, list]] = {}
+        for rec in recs:
+            if rec.meta.get("kind") == "rows":
+                key = (rec.group, rec.producer)
+                if rec.seq < self._applied_seq.get(key, -1):
+                    continue
+                ids_l, val_l = rows_by_path.setdefault(
+                    rec.meta["path"], ([], []))
+                ids_l.append(rec.ids)
+                val_l.append(decode_record(rec))
+                self._applied_seq[key] = rec.seq
+                self.applied += 1
+                applied += 1
+            else:
+                applied += int(self.apply(rec))
+        for path, (ids_l, val_l) in rows_by_path.items():
+            ids = np.concatenate(ids_l)
+            vals = np.concatenate(val_l, axis=0)
+            self.host[path][ids] = vals
+        return applied
+
     def device_params(self, dtype: str = "bfloat16",
                       shardings: Optional[PyTree] = None) -> PyTree:
         dt = jnp.dtype(dtype)
@@ -323,9 +351,7 @@ class ModelSyncEngine:
     def scatter(self) -> int:
         n = 0
         for replica, consumer in zip(self.replicas, self.consumers):
-            for rec in consumer.poll():
-                if replica.apply(rec):
-                    n += 1
+            n += replica.apply_batch(list(consumer.poll()))
         return n
 
     def metrics(self) -> dict:

@@ -22,6 +22,7 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 PyTree = Any
 
@@ -45,6 +46,19 @@ class Optimizer:
 
     def serve_weights(self, param: jax.Array, slots: dict) -> jax.Array:
         return param
+
+    # -- batched PS row path -------------------------------------------
+    def update_rows(self, w: np.ndarray, slots: dict, grads: np.ndarray,
+                    step: int, *, backend: str = "numpy"):
+        """One batched update over gathered (B, D) sparse rows — the
+        MasterShard hot path. Returns NumPy (new_w, new_slots). The base
+        implementation routes through ``update``; optimizers with a fused
+        Pallas kernel override this and dispatch on ``backend``."""
+        new_w, new_slots = self.update(
+            jnp.asarray(w), {k: jnp.asarray(v) for k, v in slots.items()},
+            jnp.asarray(grads), step)
+        return np.asarray(new_w), {k: np.asarray(v)
+                                   for k, v in new_slots.items()}
 
     # -- pytree conveniences -------------------------------------------
     def init_slots_tree(self, params: PyTree) -> PyTree:
@@ -155,6 +169,35 @@ class FTRL(Optimizer):
 
     def serve_weights(self, param, slots):
         return self.weights_from(slots["z"], slots["n"]).astype(param.dtype)
+
+    def _np_weights(self, z: np.ndarray, n: np.ndarray) -> np.ndarray:
+        shrink = np.sign(z) * self.l1 - z
+        denom = (self.beta + np.sqrt(n)) / self.alpha + self.l2
+        return np.where(np.abs(z) > self.l1, shrink / denom,
+                        np.float32(0.0)).astype(np.float32)
+
+    def update_rows(self, w, slots, grads, step, *, backend: str = "numpy"):
+        """Batched FTRL row update. ``pallas`` fuses the whole step into
+        one VMEM pass (``kernels.ftrl_row_update``); ``numpy`` is the
+        vectorized reference (identical math, fp32). Empty batches take
+        the numpy path — a zero-row Pallas grid is undefined."""
+        if backend == "pallas" and len(grads):
+            from repro.kernels import ops
+            z_new, n_new, w_new = ops.ftrl_row_update(
+                jnp.asarray(slots["z"], jnp.float32),
+                jnp.asarray(slots["n"], jnp.float32),
+                jnp.asarray(grads, jnp.float32),
+                alpha=self.alpha, beta=self.beta, l1=self.l1, l2=self.l2)
+            return np.asarray(w_new), {"z": np.asarray(z_new),
+                                       "n": np.asarray(n_new)}
+        g = np.asarray(grads, np.float32)
+        z = np.asarray(slots["z"], np.float32)
+        n = np.asarray(slots["n"], np.float32)
+        w_old = self._np_weights(z, n)
+        n_new = n + g * g
+        sigma = (np.sqrt(n_new) - np.sqrt(n)) / self.alpha
+        z_new = z + g - sigma * w_old
+        return self._np_weights(z_new, n_new), {"z": z_new, "n": n_new}
 
 
 @dataclass(frozen=True)

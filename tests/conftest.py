@@ -8,6 +8,27 @@ import numpy as np
 import pytest
 
 
+def pytest_addoption(parser):
+    parser.addoption("--runslow", action="store_true", default=False,
+                     help="run tests marked slow")
+
+
+def pytest_collection_modifyitems(config, items):
+    """Auto-skip: ``tpu``-marked tests (non-interpret Pallas) off-TPU, so
+    the suite is green on CPU CI runners; ``slow`` unless opted in."""
+    import jax
+    on_tpu = jax.default_backend() == "tpu"
+    run_slow = config.getoption("--runslow") or bool(os.environ.get("RUN_SLOW"))
+    skip_tpu = pytest.mark.skip(
+        reason="requires a real TPU (non-interpret Pallas)")
+    skip_slow = pytest.mark.skip(reason="slow: pass --runslow or RUN_SLOW=1")
+    for item in items:
+        if "tpu" in item.keywords and not on_tpu:
+            item.add_marker(skip_tpu)
+        if "slow" in item.keywords and not run_slow:
+            item.add_marker(skip_slow)
+
+
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)

@@ -1,0 +1,183 @@
+"""Vectorized PS addressing vs a dict oracle: batched ensure/lookup/evict
+must agree with the per-id dict implementation it replaced, under random
+insert/evict/re-insert sequences including arena growth and free-slot
+reuse. Plus the regression test pinning the id_of↔slot consistency the
+seed's `_ensure` grow path could violate."""
+
+import numpy as np
+import pytest
+
+from repro.core.hashmap import EMPTY, IdHashMap
+from repro.core.ps import SparseTable
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ModuleNotFoundError:
+    given = settings = st = None
+
+
+class DictOracle:
+    """Reference semantics: id -> row value (scalar per id for brevity)."""
+
+    def __init__(self):
+        self.rows: dict[int, float] = {}
+
+    def upsert(self, ids, vals):
+        for rid, v in zip(ids.tolist(), vals.tolist()):
+            self.rows[rid] = v
+
+    def evict(self, ids):
+        for rid in np.unique(ids).tolist():
+            self.rows.pop(rid, None)
+
+
+def _check_agrees(t: SparseTable, oracle: DictOracle, probe_ids: np.ndarray):
+    live = np.array(sorted(oracle.rows), dtype=np.int64)
+    # membership + cardinality
+    assert len(t) == len(oracle.rows)
+    assert set(t.all_ids().tolist()) == set(oracle.rows)
+    if len(live):
+        sl = t.lookup(live)
+        assert (sl >= 0).all()
+        # stable resolution: looking up twice gives the same slots
+        np.testing.assert_array_equal(sl, t.lookup(live))
+        w, _ = t.gather(live)
+        np.testing.assert_allclose(
+            w[:, 0], np.array([oracle.rows[r] for r in live.tolist()],
+                              np.float32))
+    # absent ids resolve to -1 / zero rows
+    absent = probe_ids[~np.isin(probe_ids, live)]
+    if len(absent):
+        assert (t.lookup(absent) == -1).all()
+        w, _ = t.gather(absent)
+        assert (w == 0).all()
+
+
+def _run_ops(ops_list):
+    t = SparseTable(2, init_capacity=4)
+    oracle = DictOracle()
+    all_seen = []
+    for kind, raw in ops_list:
+        ids = np.asarray(raw, dtype=np.int64)
+        all_seen.append(ids)
+        if kind == "upsert":
+            vals = (ids % 1000).astype(np.float32) + 0.5
+            t.scatter(ids, np.stack([vals, vals], axis=1))
+            # dict semantics: later duplicates win — same as fancy-index
+            oracle.upsert(ids, vals)
+        elif kind == "evict":
+            n_oracle = len([r for r in set(ids.tolist())
+                            if r in oracle.rows])
+            assert t.evict(ids) == n_oracle
+            oracle.evict(ids)
+        else:                                     # lookup (pure)
+            t.lookup(ids)
+    probe = np.unique(np.concatenate(all_seen)) if all_seen else \
+        np.empty(0, np.int64)
+    _check_agrees(t, oracle, probe)
+    return t
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_random_sequences_match_dict_oracle(seed):
+    rng = np.random.default_rng(seed)
+    ops_list = []
+    for _ in range(40):
+        kind = rng.choice(["upsert", "upsert", "evict", "lookup"])
+        n = int(rng.integers(1, 200))
+        # small id space → heavy re-insert / re-evict collisions
+        ids = rng.integers(0, 500, size=n)
+        ops_list.append((kind, ids))
+    _run_ops(ops_list)
+
+
+def test_free_slot_reuse_bounds_arena():
+    t = SparseTable(4, init_capacity=8)
+    a = np.arange(0, 600, dtype=np.int64)
+    b = np.arange(1000, 1600, dtype=np.int64)
+    t.ensure(a)
+    top_after_a = t._top
+    assert t.evict(a) == len(a)
+    t.ensure(b)                     # must recycle a's slots, not grow
+    assert t._top == top_after_a
+    assert len(t) == len(b)
+    assert (t.lookup(a) == -1).all()
+    assert (t.lookup(b) >= 0).all()
+
+
+def test_hashmap_tombstone_reinsert_and_growth():
+    m = IdHashMap(16)
+    ids = np.arange(0, 2000, dtype=np.int64) * 7919      # force growth
+    m.put(ids, ids % 97)
+    assert len(m) == 2000
+    m.delete(ids[::2])
+    assert len(m) == 1000
+    m.put(ids[::2], np.zeros(1000, np.int64))            # tombstone reuse
+    assert len(m) == 2000
+    np.testing.assert_array_equal(m.lookup(ids[::2]), 0)
+    np.testing.assert_array_equal(m.lookup(ids[1::2]), ids[1::2] % 97)
+
+
+def test_hashmap_negative_and_huge_ids():
+    m = IdHashMap()
+    ids = np.array([-1, -2**62, 0, 2**62, 17], dtype=np.int64)
+    m.put(ids, np.arange(5))
+    np.testing.assert_array_equal(m.lookup(ids), np.arange(5))
+    assert m.lookup(np.array([1]))[0] == -1
+
+
+# -- regression: seed `_ensure` could leave _id_of inconsistent when a
+# grown slot index skipped entries; the rewrite must keep id_of and the
+# id→slot map consistent through interleaved growth + free-list reuse.
+def test_id_of_slot_map_consistency_under_growth_and_reuse():
+    t = SparseTable(2, init_capacity=4)
+    rng = np.random.default_rng(7)
+    live = set()
+    for round_ in range(30):
+        ins = rng.integers(0, 3000, size=rng.integers(1, 120))
+        t.ensure(ins)
+        live.update(np.unique(ins).tolist())
+        if round_ % 3 == 2 and live:
+            drop = rng.choice(np.array(sorted(live)),
+                              size=max(1, len(live) // 3), replace=False)
+            t.evict(drop)
+            live.difference_update(drop.tolist())
+        # invariant: every live id round-trips id -> slot -> id
+        ids = np.array(sorted(live), dtype=np.int64)
+        sl = t.lookup(ids)
+        assert (sl >= 0).all()
+        np.testing.assert_array_equal(t._id_of[sl], ids)
+        # and no two live ids share a slot
+        assert len(np.unique(sl)) == len(sl)
+        # evicted slots are marked unused (sentinel, since -1 is a
+        # legal id)
+        used = np.zeros(t._w.shape[0], dtype=bool)
+        used[sl] = True
+        assert (t._id_of[~used] == EMPTY).all()
+
+
+def test_snapshot_restore_roundtrip_after_churn():
+    t = SparseTable(3, ("z", "n"), init_capacity=4)
+    ids = np.arange(100, dtype=np.int64)
+    w = np.random.default_rng(1).normal(size=(100, 3)).astype(np.float32)
+    t.scatter(ids, w, {"z": w + 1, "n": w * w}, step=5)
+    t.evict(ids[:50])
+    snap = t.snapshot()
+    r = SparseTable.restore(snap, 3, ("z", "n"))
+    assert set(r.all_ids().tolist()) == set(ids[50:].tolist())
+    got, slots = r.gather(ids[50:])
+    np.testing.assert_allclose(got, w[50:])
+    np.testing.assert_allclose(slots["z"], w[50:] + 1)
+
+
+if st is not None:
+    op_strategy = st.tuples(
+        st.sampled_from(["upsert", "evict", "lookup"]),
+        st.lists(st.integers(min_value=-50, max_value=200), min_size=1,
+                 max_size=60))
+
+    @given(ops_list=st.lists(op_strategy, min_size=1, max_size=25))
+    @settings(max_examples=60, deadline=None)
+    def test_property_matches_dict_oracle(ops_list):
+        _run_ops([(k, np.asarray(v, np.int64)) for k, v in ops_list])

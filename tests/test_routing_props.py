@@ -2,6 +2,10 @@
 the WeiPS consistency story depends on."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need hypothesis (dev extra)")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
