@@ -1,0 +1,358 @@
+"""Streaming-sync-plane benchmark: the collect→gather→push→scatter spine
+(paper §4.1), measured stage by stage.
+
+Legs:
+  * push_stage — the acceptance leg: rows/sec through ``Pusher.push`` at
+    the 65k-id record size, vectorized (ONE gather + ONE encode + argsort
+    partition routing) vs the pre-refactor per-partition/per-chunk loop,
+    which is kept here verbatim (``SeedLoopPusher``) as the reference
+    point for the recorded speedup.
+  * scatter_stage — batched ``Scatter.poll`` (one ownership filter + one
+    coalesced table scatter per group) vs the per-record apply loop.
+  * codecs — identity / cast16 / int8 wire bytes and push throughput at
+    the same record size (int8 is the delta-codec path: ~4x payload
+    reduction vs identity fp32).
+  * backends — numpy vs pallas(interpret) int8 codec through the
+    ``kernels/delta_codec.py`` kernel (small block: interpret mode runs
+    grid steps in Python; TPU is the real measurement) + bit-equivalence.
+  * gather_modes — realtime / threshold / period trigger sweep over a
+    Zipfian update stream through ``SyncPipeline``: dedup ratio (the
+    paper's ≥90 % repetition effect), sync lag, pushed bytes.
+
+Timing uses best-of-``--reps`` (the ``timeit`` convention: the minimum
+measures the code, not scheduler/VM noise).
+
+Run:  PYTHONPATH=src python benchmarks/sync_path.py
+      [--rows 262144 --push-ids 65536 --dim 64 --parts 32 --quick]
+Emits BENCH_sync_path.json (or --out PATH).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Baseline: the pre-refactor Pusher.push body (verbatim semantics: python
+# loop over split_by_partition's boolean masks, per-chunk gather + encode)
+# and the per-record Scatter.poll apply loop.
+# ---------------------------------------------------------------------------
+class SeedTransform:
+    """The pre-refactor identity transform, verbatim: eager-jnp
+    ``serve_values`` on every encode call (no numpy fast path, no
+    cache blocking, no backend switch) — what the pre-refactor loop
+    actually ran per partition chunk."""
+
+    name = "identity"
+
+    def __init__(self, optimizer):
+        self.optimizer = optimizer
+
+    def serve_values(self, w, slots):
+        if self.optimizer is not None:
+            import jax.numpy as jnp
+            return np.asarray(self.optimizer.serve_weights(
+                jnp.asarray(w),
+                {k: jnp.asarray(v) for k, v in slots.items()}))
+        return w
+
+    def encode(self, w, slots):
+        return {"values": self.serve_values(w, slots).astype(np.float32)}
+
+
+def _seed_gather(table, ids):
+    """Pre-refactor ``SparseTable.gather`` (create=False), verbatim:
+    unconditional missing-row masking — one np.where allocation+pass per
+    fetched column even when every id exists."""
+    sl = table.lookup(ids)
+    ok = sl >= 0
+    safe = np.where(ok, sl, 0)
+    w = table._fetch(table._w, safe)
+    w = np.where(ok[:, None], w, np.zeros((), dtype=table.dtype))
+    slots = {}
+    for n in table.slot_names:
+        v = table._fetch(table._slots[n], safe)
+        slots[n] = np.where(ok[:, None], v, np.float32(0.0))
+    return w, slots
+
+
+def _seed_nbytes(rec) -> int:
+    """Pre-refactor ``Record.nbytes``: a fresh pickle of the payload on
+    every call (it was called twice per record — pusher accounting and
+    queue accounting)."""
+    import pickle
+    try:
+        pay = len(pickle.dumps(rec.payload, protocol=4))
+    except Exception:
+        pay = 0
+    return int(rec.ids.nbytes + pay + 64)
+
+
+class SeedLoopPusher:
+    def __init__(self, shard, queue, plan, transform,
+                 max_ids_per_record: int = 65536):
+        self.shard = shard
+        self.queue = queue
+        self.plan = plan
+        self.transform = transform
+        self.max_ids_per_record = max_ids_per_record
+        self._seq: dict[str, int] = {}
+        self.pushed_bytes = 0
+
+    def _next_seq(self, group):
+        s = self._seq.get(group, -1) + 1
+        self._seq[group] = s
+        return s
+
+    def push(self, gathered, now=0.0):
+        from repro.core.queue import Record
+        n_rec = 0
+        for (group, op), ids in gathered.items():
+            table = self.shard.tables[group]
+            seq = self._next_seq(group)
+            by_part = self.plan.split_by_partition(ids)
+            for part, part_ids in by_part.items():
+                for i in range(0, len(part_ids), self.max_ids_per_record):
+                    chunk = part_ids[i:i + self.max_ids_per_record]
+                    if op == "delete":
+                        payload = {}
+                    else:
+                        w, slots = _seed_gather(table, chunk)
+                        payload = self.transform.encode(w, slots)
+                    rec = Record(group=group, op=op, ids=chunk,
+                                 payload=payload, seq=seq,
+                                 producer=self.shard.shard_id,
+                                 meta={"codec": self.transform.name,
+                                       "t": now})
+                    self.queue.produce(int(part), rec)
+                    _seed_nbytes(rec)            # queue-side pickle
+                    self.pushed_bytes += _seed_nbytes(rec)
+                    n_rec += 1
+        return n_rec
+
+
+def seed_loop_poll(shard, consumer, plan):
+    """Pre-refactor scatter: per-record ownership filter + apply."""
+    from repro.core.queue import Record
+    from repro.core.streaming import _filter_payload
+    n = 0
+    for rec in consumer.poll():
+        if not rec.group.startswith("dense/"):
+            owner = plan.slave_shard(rec.ids)
+            keep = owner == shard.shard_id
+            if not keep.all():
+                rec = Record(group=rec.group, op=rec.op, ids=rec.ids[keep],
+                             payload=_filter_payload(rec.payload, keep),
+                             seq=rec.seq, producer=rec.producer,
+                             meta=rec.meta)
+        if shard.apply(rec):
+            n += 1
+    return n
+
+
+def best_of(fn, reps: int) -> float:
+    fn()                                              # warm-up
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rows", type=int, default=262_144)
+    ap.add_argument("--push-ids", type=int, default=65_536,
+                    help="unique ids per push flush (the 65k-id record "
+                         "size of the acceptance criterion)")
+    ap.add_argument("--dim", type=int, default=64)
+    ap.add_argument("--parts", type=int, default=32)
+    ap.add_argument("--slaves", type=int, default=4)
+    ap.add_argument("--reps", type=int, default=5)
+    ap.add_argument("--pallas-rows", type=int, default=4096,
+                    help="row count for the pallas-interpret codec leg")
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default="BENCH_sync_path.json")
+    args = ap.parse_args()
+    if args.quick:
+        args.rows = min(args.rows, 65_536)
+        args.push_ids = min(args.push_ids, 16_384)
+        args.reps = 2
+
+    from repro.core.ps import MasterShard, SlaveShard
+    from repro.core.queue import Consumer, PartitionedQueue
+    from repro.core.routing import RoutingPlan
+    from repro.core.streaming import Pusher, Scatter, SyncPipeline
+    from repro.core.transform import make_transform
+    from repro.optim import get_optimizer
+
+    rng = np.random.default_rng(0)
+    plan = RoutingPlan(1, args.slaves, args.parts)
+    opt = get_optimizer("ftrl")
+    ids = rng.choice(1 << 40, size=args.rows, replace=False).astype(np.int64)
+
+    def populate(dim):
+        """Master with FTRL training state (w + z,n rows) for every id."""
+        m = MasterShard(0, {"w": dim}, opt)
+        g = rng.normal(size=(4096, dim)).astype(np.float32)
+        for i in range(0, args.rows, 4096):
+            b = ids[i:i + 4096]
+            m.apply_batch("w", b, g[:len(b)])
+        return m
+
+    push_ids = np.sort(rng.choice(ids, size=args.push_ids, replace=False))
+    gathered = {("w", "upsert"): push_ids}
+
+    results: dict[str, dict] = {}
+
+    # -- push stage: seed loop vs vectorized (the acceptance leg) ----------
+    # Swept over the paper's model zoo row dims (§4.1.2): LR dim 1 (the
+    # flagship CTR config), FM dim 16, DNN dim 64. The seed loop's
+    # per-chunk eager-JAX dispatch is size-independent, so the win is
+    # largest on the skinny rows online CTR actually serves.
+    transform = make_transform("identity", opt)
+    seed_transform = SeedTransform(opt)
+    results["push_stage"] = {
+        "push_ids": args.push_ids, "partitions": args.parts, "by_dim": {}}
+    for dim in (1, 16, args.dim):
+        master = populate(dim)
+
+        def run_seed():
+            SeedLoopPusher(master, PartitionedQueue(args.parts), plan,
+                           seed_transform).push(gathered, now=0.0)
+
+        def run_vec():
+            Pusher(master, PartitionedQueue(args.parts), plan,
+                   transform).push(gathered, now=0.0)
+
+        t_seed = best_of(run_seed, max(1, args.reps // 2))
+        t_vec = best_of(run_vec, args.reps)
+        results["push_stage"]["by_dim"][str(dim)] = {
+            "seed_loop_rows_per_sec": args.push_ids / t_seed,
+            "vectorized_rows_per_sec": args.push_ids / t_vec,
+            "speedup": t_seed / t_vec,
+        }
+    results["push_stage"]["speedup"] = \
+        results["push_stage"]["by_dim"]["16"]["speedup"]    # FM default
+
+    # master for the remaining legs (DNN-width rows)
+    master = populate(args.dim)
+
+    # -- scatter stage: per-record apply loop vs batched apply_batch -------
+    q = PartitionedQueue(args.parts)
+    Pusher(master, q, plan, transform).push(gathered, now=0.0)
+
+    def run_seed_scatter():
+        shard = SlaveShard(0, {"w": args.dim})
+        seed_loop_poll(shard, Consumer(q, plan.partitions_for_slave(0)),
+                       plan)
+
+    def run_vec_scatter():
+        shard = SlaveShard(0, {"w": args.dim})
+        Scatter(shard, q, plan).poll()
+
+    t_sseed = best_of(run_seed_scatter, max(1, args.reps // 2))
+    t_svec = best_of(run_vec_scatter, args.reps)
+    slave_rows = int(np.sum(plan.slave_shard(push_ids) == 0))
+    results["scatter_stage"] = {
+        "rows": slave_rows,
+        "seed_loop_rows_per_sec": slave_rows / t_sseed,
+        "batched_rows_per_sec": slave_rows / t_svec,
+        "speedup": t_sseed / t_svec,
+    }
+
+    # -- codec sweep: wire bytes + throughput at the same record size ------
+    results["codecs"] = {}
+    for codec in ("identity", "cast16", "int8"):
+        tr = make_transform(codec, opt)
+        qq = PartitionedQueue(args.parts)
+        pusher = Pusher(master, qq, plan, tr)
+        t = best_of(lambda p=pusher: p.push(gathered, now=0.0),
+                    max(1, args.reps // 2))
+        w, slots = master.tables["w"].gather(push_ids)
+        payload = tr.payload_bytes(tr.encode(w, slots))
+        results["codecs"][codec] = {
+            "rows_per_sec": args.push_ids / t,
+            "pushed_bytes_per_flush": pusher.pushed_bytes
+            // (1 + max(1, args.reps // 2)),       # warm-up + reps pushes
+            "payload_bytes_per_row": payload / args.push_ids,
+        }
+    ident = results["codecs"]["identity"]["payload_bytes_per_row"]
+    int8 = results["codecs"]["int8"]["payload_bytes_per_row"]
+    results["codecs"]["int8_payload_compression_vs_identity"] = ident / int8
+    results["codecs"]["int8_wire_compression_vs_identity"] = (
+        results["codecs"]["identity"]["pushed_bytes_per_flush"]
+        / results["codecs"]["int8"]["pushed_bytes_per_flush"])
+
+    # -- backend sweep: numpy vs pallas(interpret) int8 codec --------------
+    blk = push_ids[:args.pallas_rows]
+    w, slots = master.tables["w"].gather(blk)
+    results["backends"] = {}
+    for backend in ("numpy", "pallas"):
+        tr = make_transform("int8", opt, backend=backend)
+        t = best_of(lambda tr=tr: tr.encode(w, slots), 2)
+        results["backends"][backend] = {
+            "rows": len(blk),
+            "encode_rows_per_sec": len(blk) / t,
+        }
+    enc_np = make_transform("int8", opt, backend="numpy").encode(w, slots)
+    enc_pl = make_transform("int8", opt, backend="pallas").encode(w, slots)
+    results["backends"]["bit_equivalent"] = bool(
+        np.array_equal(enc_np["q"], enc_pl["q"])
+        and np.allclose(enc_np["scale"], enc_pl["scale"], rtol=1e-7))
+    results["backends"]["note"] = (
+        "interpret mode runs grid steps in Python; on TPU the same call "
+        "compiles to a Mosaic VMEM-resident quantize pass")
+
+    # -- gather-mode sweep: Zipfian stream, dedup + lag --------------------
+    results["gather_modes"] = {}
+    grads = rng.normal(size=(4096, args.dim)).astype(np.float32)
+    zipf_ids = ids[np.minimum(rng.zipf(1.3, size=(50, 4096)) - 1,
+                              args.rows - 1)]
+    for mode in ("realtime", "threshold", "period"):
+        m = MasterShard(0, {"w": args.dim}, opt)
+        pipe = SyncPipeline(
+            m, [SlaveShard(i, {"w": args.dim}) for i in range(args.slaves)],
+            PartitionedQueue(args.parts), plan,
+            make_transform("int8", opt), gather_mode=mode,
+            threshold=16_384, period=1.0)
+        t0 = time.perf_counter()
+        for step in range(zipf_ids.shape[0]):
+            b = zipf_ids[step]
+            m.apply_batch("w", b, grads[:len(b)])
+            pipe.tick(now=step * 0.1)
+        pipe.tick(now=zipf_ids.shape[0] * 0.1)         # drain
+        wall = time.perf_counter() - t0
+        met = pipe.metrics(now=zipf_ids.shape[0] * 0.1)
+        results["gather_modes"][mode] = {
+            "dedup_ratio": met.dedup_ratio,
+            "sync_lag_seconds": met.sync_lag_seconds,
+            "pushed_bytes": met.pushed_bytes,
+            "records": pipe.pusher.pushed_records,
+            "wall_seconds": wall,
+        }
+
+    out = {
+        "config": {"rows": args.rows, "push_ids": args.push_ids,
+                   "dim": args.dim, "partitions": args.parts,
+                   "slaves": args.slaves, "reps": args.reps,
+                   "optimizer": "ftrl", "quick": args.quick},
+        "results": results,
+    }
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+    print(json.dumps(out, indent=2))
+    print(f"\npush-stage speedup over pre-refactor loop: "
+          f"{results['push_stage']['speedup']:.1f}x; scatter-stage: "
+          f"{results['scatter_stage']['speedup']:.1f}x; int8 payload "
+          f"compression: "
+          f"{results['codecs']['int8_payload_compression_vs_identity']:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

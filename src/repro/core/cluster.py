@@ -51,6 +51,7 @@ class ClusterConfig:
     gather_threshold: int = 4096
     gather_period: float = 1.0
     codec: str = "identity"      # identity | cast16 | int8
+    codec_backend: str = "numpy"  # numpy | pallas (delta_codec kernel)
     local_ckpt_interval: float = 30.0
     remote_ckpt_interval: float = 600.0
     ckpt_root: Optional[str] = None
@@ -72,7 +73,8 @@ class WeiPSCluster:
         self.plan = RoutingPlan(c.num_master, c.num_slave, c.num_partitions)
         self.groups = ctr_model.groups_for(model_cfg)
         self.optimizer = _make_optimizer(model_cfg)
-        self.transform = make_transform(c.codec, self.optimizer)
+        self.transform = make_transform(c.codec, self.optimizer,
+                                        backend=c.codec_backend)
         self.scheduler = Scheduler()
         self.queue = PartitionedQueue(c.num_partitions)
         self.filter = FeatureFilter(c.feature_min_count, c.feature_ttl_steps)
@@ -109,7 +111,8 @@ class WeiPSCluster:
         for sid in range(c.num_slave):
             replicas = []
             for rid in range(c.num_replicas):
-                shard = SlaveShard(sid, self.groups, backend=c.ps_backend)
+                shard = SlaveShard(sid, self.groups, backend=c.ps_backend,
+                                   codec_backend=c.codec_backend)
                 replicas.append(shard)
                 self.scatters.append(Scatter(shard, self.queue, self.plan))
                 self.scheduler.register(ComponentInfo("slave", sid, rid))

@@ -1,4 +1,4 @@
-"""Feature admission and expiry (paper §4.1 c: "feature filter").
+"""Feature admission and expiry (paper §4.1c: "feature filter").
 
 Admission: probabilistic / count-threshold entry so one-off junk features
 never allocate PS rows. Expiry: rows untouched for ``ttl_steps`` are

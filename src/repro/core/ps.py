@@ -150,10 +150,18 @@ class SparseTable:
             return arena.reshape(-1).take(sl, mode="clip")[:, None]  # row memcpys
         return arena.take(sl, axis=0, mode="clip")
 
-    def read_rows(self, sl: np.ndarray):
-        """(w, slots) for resolved arena slots — backend-routed gather."""
-        w = self._fetch(self._w, sl)
-        slots = {n: self._fetch(a, sl) for n, a in self._slots.items()}
+    def read_rows(self, sl: np.ndarray, *, want_w: bool = True,
+                  slot_names: Optional[tuple] = None):
+        """(w, slots) for resolved arena slots — backend-routed gather.
+        ``want_w=False`` / ``slot_names`` skip columns the caller will not
+        read (the pusher's transform declares its inputs: an FTRL codec
+        derives w from (z, n) and never touches the stored w; a plain
+        weight codec never touches the slots). Skipped w is a (n, 0)
+        placeholder so row counts stay consistent."""
+        names = self.slot_names if slot_names is None else slot_names
+        w = self._fetch(self._w, sl) if want_w else \
+            np.empty((len(sl), 0), dtype=self.dtype)
+        slots = {n: self._fetch(self._slots[n], sl) for n in names}
         return w, slots
 
     def write_rows(self, sl: np.ndarray, w: np.ndarray,
@@ -166,23 +174,35 @@ class SparseTable:
         self.touch_count[sl] += 1
 
     # -- access -------------------------------------------------------------
-    def gather(self, ids: np.ndarray, *, create: bool = False):
+    def gather(self, ids: np.ndarray, *, create: bool = False,
+               want_w: bool = True, slot_names: Optional[tuple] = None):
         """Returns (w (n,dim), slots dict name->(n,dim)). Missing rows are
-        zeros unless ``create``."""
+        zeros unless ``create``. ``want_w``/``slot_names`` select columns
+        (see ``read_rows``)."""
         ids = np.asarray(ids, dtype=np.int64)
         if create:
             sl, found = self._map.lookup_mask(ids)
             if not found.all():               # rare: rows to create
                 sl = self._fill_missing(ids, sl, found)
-            return self.read_rows(sl)
+            return self.read_rows(sl, want_w=want_w, slot_names=slot_names)
         sl = self.lookup(ids)
         ok = sl >= 0
+        if ok.all():
+            # hot path (pusher flushes gather the master's own dirty ids,
+            # which always exist): plain read, no missing-row masking —
+            # the np.where passes below would add ~2x the gather's memory
+            # traffic for nothing
+            return self.read_rows(sl, want_w=want_w, slot_names=slot_names)
+        names = self.slot_names if slot_names is None else slot_names
         safe = np.where(ok, sl, 0)
-        w = self._fetch(self._w, safe)
-        w = np.where(ok[:, None], w, np.zeros((), dtype=self.dtype))
+        if want_w:
+            w = self._fetch(self._w, safe)
+            w = np.where(ok[:, None], w, np.zeros((), dtype=self.dtype))
+        else:
+            w = np.empty((len(sl), 0), dtype=self.dtype)
         slots = {}
-        for n, a in self._slots.items():
-            v = self._fetch(a, safe)
+        for n in names:
+            v = self._fetch(self._slots[n], safe)
             slots[n] = np.where(ok[:, None], v, np.float32(0.0))
         return w, slots
 
@@ -368,23 +388,33 @@ class SlaveShard:
     application of stream records (last-writer-wins by ``seq``)."""
 
     def __init__(self, shard_id: int, groups: dict[str, int],
-                 backend: str = "numpy"):
+                 backend: str = "numpy", codec_backend: str = "numpy"):
         self.shard_id = shard_id
         self.backend = backend
+        self.codec_backend = codec_backend   # decode engine (transform.py)
         self.tables = {g: SparseTable(dim, backend=backend)
                        for g, dim in groups.items()}
         self.dense: dict[str, np.ndarray] = {}
         self.dense_versions: dict[str, int] = {}
-        # (group, producer) -> last applied seq, for LWW idempotence
-        self._applied_seq: dict[tuple[str, int], int] = {}
+        # (group, producer, partition) -> last applied seq, for LWW
+        # idempotence. Keyed per partition stream: ids route to
+        # partitions deterministically, so partitions are independent
+        # ordered streams — a flush that touches only partition p must
+        # not mark another partition's in-flight records stale.
+        self._applied_seq: dict[tuple[str, int, int], int] = {}
         self.alive = True
         self.applied_records = 0
         self.skipped_records = 0
 
+    @staticmethod
+    def _seq_key(record) -> tuple[str, int, int]:
+        return (record.group, record.producer,
+                record.meta.get("partition", -1))
+
     def apply(self, record) -> bool:
         """Apply one stream record; returns False if skipped (stale)."""
         assert self.alive, f"slave shard {self.shard_id} is down"
-        key = (record.group, record.producer)
+        key = self._seq_key(record)
         last = self._applied_seq.get(key, -1)
         # strictly-older records are stale (LWW). Equal-seq records are
         # sibling chunks of the SAME flush covering disjoint IDs (or exact
@@ -397,16 +427,63 @@ class SlaveShard:
             name = record.group[len("dense/"):]
             ver = int(record.ids[0])
             if self.dense_versions.get(name, -1) < ver:
-                self.dense[name] = decode_record(record)
+                self.dense[name] = decode_record(record,
+                                                 backend=self.codec_backend)
                 self.dense_versions[name] = ver
         elif record.op == "delete":
             self.tables[record.group].evict(record.ids)
         else:
-            values = decode_record(record)
+            values = decode_record(record, backend=self.codec_backend)
             self.tables[record.group].scatter(record.ids, values)
         self._applied_seq[key] = max(last, record.seq)
         self.applied_records += 1
         return True
+
+    def apply_batch(self, records: list) -> list:
+        """Batched idempotent application of a poll's worth of records:
+        sparse upserts are coalesced per group into ONE decoded value block
+        and ONE ``SparseTable.scatter`` (concatenation preserves arrival
+        order, so overlapping ids within the batch resolve last-writer-wins
+        exactly like sequential ``apply`` — numpy fancy assignment writes
+        the later occurrence). Dense records and deletes are versioned /
+        destructive and keep the singleton ``apply`` path. Returns the
+        records actually applied (stale ones are skipped and counted)."""
+        assert self.alive, f"slave shard {self.shard_id} is down"
+        from repro.core.transform import decode_record
+        applied: list = []
+        rows: dict[str, tuple[list, list]] = {}
+
+        def flush(group) -> None:
+            ids_l, val_l = rows.pop(group)
+            ids = ids_l[0] if len(ids_l) == 1 else np.concatenate(ids_l)
+            vals = val_l[0] if len(val_l) == 1 else \
+                np.concatenate(val_l, axis=0)
+            self.tables[group].scatter(ids, vals)
+
+        for rec in records:
+            if rec.group.startswith("dense/") or rec.op == "delete":
+                # a delete must not overtake coalesced-but-unwritten
+                # upserts for its group (the deferred scatter would
+                # resurrect the evicted rows) — flush those first
+                if rec.op == "delete" and rec.group in rows:
+                    flush(rec.group)
+                if self.apply(rec):
+                    applied.append(rec)
+                continue
+            key = self._seq_key(rec)
+            last = self._applied_seq.get(key, -1)
+            if rec.seq < last:
+                self.skipped_records += 1
+                continue
+            ids_l, val_l = rows.setdefault(rec.group, ([], []))
+            ids_l.append(rec.ids)
+            val_l.append(decode_record(rec, backend=self.codec_backend))
+            self._applied_seq[key] = max(last, rec.seq)
+            self.applied_records += 1
+            applied.append(rec)
+        for group in list(rows):
+            flush(group)
+        return applied
 
     def lookup(self, group: str, ids: np.ndarray) -> np.ndarray:
         """Latency-path query: serve weights (missing rows -> zeros)."""

@@ -5,7 +5,7 @@
   Gatherer   — deduplicating aggregation window with the paper's three
                trigger modes: real-time, threshold-based, period-based.
                Dedup ratio is tracked (the paper observes ≥90 % repetition
-               of updates within 10 s — benchmarks/sync_bench.py reproduces
+               of updates within 10 s — benchmarks/sync_path.py reproduces
                this with Zipfian update streams).
   Pusher     — reads *current full values* for the gathered IDs (eventual
                consistency at ID granularity: never increments), applies the
@@ -13,12 +13,17 @@
                serializes, and produces to the ID-routed queue partition.
   Scatter    — per slave shard; consumes its partitions and applies records
                idempotently (LWW by seq).
+
+The push and scatter stages are fully batched (no per-partition/per-chunk
+Python): one gather + one encode per (group, op), vectorized argsort
+routing to partitions, and one ownership filter + one coalesced scatter
+per poll — see ``Pusher.push`` / ``Scatter.poll``. ``benchmarks/
+sync_path.py`` measures this against the pre-refactor per-partition loop.
 """
 
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 import numpy as np
@@ -118,9 +123,26 @@ class Gatherer:
         return out
 
 
+def _slice_payload(payload: dict, lo: int, hi: int, n: int) -> dict:
+    """Row-slice every per-row array of an encoded payload (arrays whose
+    leading dim is the row count ``n``); scalars/metadata pass through."""
+    out = {}
+    for k, v in payload.items():
+        a = np.asarray(v)
+        out[k] = a[lo:hi] if a.ndim >= 1 and a.shape[0] == n else v
+    return out
+
+
 class Pusher:
     """Master-side: full-current-value reads + transform + partitioned
-    produce. ``seq`` is per (group, producer) monotonic."""
+    produce. ``seq`` is per (group, producer) monotonic.
+
+    The sparse hot path is batched end-to-end: ONE ``table.gather`` and
+    ONE ``transform.encode`` cover every id of a (group, op) flush — the
+    encode amortizes JAX dispatch (FTRL z,n→w) and runs the codec kernel
+    over the full row block — then ids are routed to partitions with a
+    single argsort and the encoded payload is *sliced*, never re-encoded,
+    per partition-chunk record."""
 
     def __init__(self, shard: MasterShard, queue: PartitionedQueue,
                  plan: RoutingPlan, transform: Transform,
@@ -145,54 +167,97 @@ class Pusher:
         n_rec = 0
         for (group, op), ids in gathered.items():
             if group.startswith("dense/"):
-                name = group[len("dense/"):]
-                value = self.shard.dense.tensors.get(name)
-                if value is None:
-                    continue
-                ver = self.shard.dense.versions[name]
-                payload = self.transform.encode(
-                    value.reshape(1, -1),
-                    self.shard.dense.slots.get(name, {}))
-                rec = Record(group=group, op="upsert",
-                             ids=np.array([ver], np.int64), payload=payload,
-                             seq=self._next_seq(group),
-                             producer=self.shard.shard_id,
-                             meta={"codec": self.transform.name, "t": now,
-                                   "shape": value.shape})
-                part = int(ver) % self.queue.num_partitions
-                # dense tensors go to every slave: replicate to one
-                # partition per slave shard
-                for slave in range(self.plan.num_slave):
-                    p = self.plan.partitions_for_slave(slave)[0]
-                    self.queue.produce(p, rec)
-                    self.pushed_bytes += rec.nbytes()
-                    n_rec += 1
-                continue
-
-            table = self.shard.tables[group]
-            seq = self._next_seq(group)
-            by_part = self.plan.split_by_partition(ids)
-            for part, part_ids in by_part.items():
-                for i in range(0, len(part_ids), self.max_ids_per_record):
-                    chunk = part_ids[i:i + self.max_ids_per_record]
-                    if op == "delete":
-                        payload = {}
-                    else:
-                        w, slots = table.gather(chunk)
-                        payload = self.transform.encode(w, slots)
-                    rec = Record(group=group, op=op, ids=chunk,
-                                 payload=payload, seq=seq,
-                                 producer=self.shard.shard_id,
-                                 meta={"codec": self.transform.name, "t": now})
-                    self.queue.produce(int(part), rec)
-                    self.pushed_bytes += rec.nbytes()
-                    n_rec += 1
+                n_rec += self._push_dense(group, op, now)
+            else:
+                n_rec += self._push_sparse(group, op, ids, now)
         self.pushed_records += n_rec
         return n_rec
 
+    def _push_dense(self, group: str, op: str, now: float) -> int:
+        name = group[len("dense/"):]
+        value = self.shard.dense.tensors.get(name)
+        if value is None:
+            return 0
+        ver = self.shard.dense.versions[name]
+        # copy: identity encode passes arrays through uncopied, and a
+        # queued payload must never alias the live dense tensor
+        payload = self.transform.encode(
+            value.reshape(1, -1).copy(),
+            self.shard.dense.slots.get(name, {}))
+        rec = Record(group=group, op="upsert",
+                     ids=np.array([ver], np.int64), payload=payload,
+                     seq=self._next_seq(group),
+                     producer=self.shard.shard_id,
+                     meta={"codec": self.transform.name, "t": now,
+                           "shape": value.shape})
+        n = 0
+        # dense tensors go to every slave: replicate to one partition per
+        # slave shard
+        for slave in range(self.plan.num_slave):
+            p = self.plan.partitions_for_slave(slave)[0]
+            self.queue.produce(p, rec)
+            self.pushed_bytes += rec.nbytes()
+            n += 1
+        return n
+
+    def _push_sparse(self, group: str, op: str, ids: np.ndarray,
+                     now: float) -> int:
+        if len(ids) == 0:
+            return 0
+        table = self.shard.tables[group]
+        seq = self._next_seq(group)
+        # vectorized routing: one argsort groups ids into contiguous
+        # partition segments (vs. the pre-refactor num_partitions boolean
+        # masks over the whole id set)
+        part = self.plan.partition(ids)
+        order = np.argsort(part, kind="stable")
+        ids = ids.take(order, mode="clip")
+        part = part.take(order, mode="clip")
+        seg = np.flatnonzero(np.diff(part)) + 1      # segment boundaries
+        starts = np.concatenate(([0], seg))
+        ends = np.concatenate((seg, [len(ids)]))
+        if op == "delete":
+            payload = None
+        else:
+            # ONE batched gather, reading only the columns the transform
+            # declares (FTRL codecs read (z, n) and skip w; plain codecs
+            # read w and skip the slots), then ONE encode
+            w, slots = table.gather(
+                ids, want_w=self.transform.requires_w,
+                slot_names=self.transform.required_slots)
+            payload = self.transform.encode(w, slots)
+        n = 0
+        for s, e in zip(starts, ends):
+            p = int(part[s])
+            recs = []
+            for i in range(s, e, self.max_ids_per_record):
+                j = min(i + self.max_ids_per_record, e)
+                recs.append(Record(
+                    group=group, op=op, ids=ids[i:j],
+                    payload={} if payload is None
+                    else _slice_payload(payload, i, j, len(ids)),
+                    seq=seq, producer=self.shard.shard_id,
+                    # partition stamp: ids route to partitions
+                    # deterministically, so each partition is its own
+                    # ordered stream — slaves key LWW staleness per
+                    # (group, producer, partition), not globally (a
+                    # global key would mis-skip a partition's records
+                    # when a later flush touched only other partitions)
+                    meta={"codec": self.transform.name, "t": now,
+                          "partition": p}))
+            self.queue.produce_many(p, recs)
+            self.pushed_bytes += sum(r.nbytes() for r in recs)
+            n += len(recs)
+        return n
+
 
 class Scatter:
-    """Slave-side consumer: poll partitions, apply idempotently."""
+    """Slave-side consumer: poll partitions, apply idempotently.
+
+    A poll is batched: ownership of every sparse id in the poll is
+    resolved with ONE vectorized routing pass, then the surviving records
+    go through ``SlaveShard.apply_batch`` — one coalesced table scatter
+    per group instead of a per-record apply loop."""
 
     def __init__(self, shard: SlaveShard, queue: PartitionedQueue,
                  plan: RoutingPlan,
@@ -205,26 +270,36 @@ class Scatter:
         self.last_record_time = 0.0
 
     def poll(self, max_records: Optional[int] = None) -> int:
-        n = 0
-        for rec in self.consumer.poll(max_records):
-            # model routing: keep only ids owned by this slave shard — with
-            # num_partitions % num_slave == 0 this filter is a no-op for
-            # sparse groups (partition congruence), but guards dense
-            # broadcast records and future re-partitioning.
-            if not rec.group.startswith("dense/"):
-                owner = self.plan.slave_shard(rec.ids)
-                keep = owner == self.shard.shard_id
-                if not keep.all():
-                    rec = Record(group=rec.group, op=rec.op,
-                                 ids=rec.ids[keep],
-                                 payload=_filter_payload(rec.payload, keep),
-                                 seq=rec.seq, producer=rec.producer,
-                                 meta=rec.meta)
-            if self.shard.apply(rec):
-                n += 1
-                self.last_record_time = rec.meta.get("t", 0.0)
-        self.applied += n
-        return n
+        recs = self.consumer.poll(max_records)
+        if not recs:
+            return 0
+        # model routing: keep only ids owned by this slave shard — with
+        # num_partitions % num_slave == 0 this filter is a no-op for
+        # sparse groups (partition congruence), but guards dense
+        # broadcast records and future re-partitioning. One vectorized
+        # ownership pass covers the whole poll.
+        sparse = [k for k, r in enumerate(recs)
+                  if not r.group.startswith("dense/")]
+        if sparse:
+            owner = self.plan.slave_shard(
+                np.concatenate([recs[k].ids for k in sparse]))
+            keep_all = owner == self.shard.shard_id
+            if not keep_all.all():
+                off = 0
+                for k in sparse:
+                    r = recs[k]
+                    keep = keep_all[off:off + len(r.ids)]
+                    off += len(r.ids)
+                    if not keep.all():
+                        recs[k] = Record(
+                            group=r.group, op=r.op, ids=r.ids[keep],
+                            payload=_filter_payload(r.payload, keep),
+                            seq=r.seq, producer=r.producer, meta=r.meta)
+        applied = self.shard.apply_batch(recs)
+        if applied:
+            self.last_record_time = applied[-1].meta.get("t", 0.0)
+        self.applied += len(applied)
+        return len(applied)
 
     def offsets(self) -> dict[int, int]:
         return dict(self.consumer.offsets)
@@ -263,6 +338,9 @@ class SyncPipeline:
         self.gatherer = Gatherer(gather_mode, threshold=threshold,
                                  period=period)
         self.pusher = Pusher(master, queue, plan, transform)
+        # consumer-side codec backend is each SlaveShard's own setting
+        # (producer and consumer backends are independent — see
+        # transform.py); the pipeline never overrides it
         self.scatters = [Scatter(s, queue, plan) for s in slaves]
         self.queue = queue
 

@@ -66,6 +66,7 @@ class SyncConfig:
     period: float = 1.0
     threshold: int = 1 << 20
     codec: str = "cast16"
+    codec_backend: str = "numpy"      # numpy | pallas (delta_codec kernel)
     delta_threshold: float = 0.0      # 0 = push every dirty item
     full_refresh_every: int = 0       # flushes between forced full pushes
     embed_row_chunk: int = 65536
@@ -82,10 +83,11 @@ class ServeReplica:
     mesh with different shardings — model routing for the dense plane)."""
 
     def __init__(self, cfg: ModelConfig, params_like: PyTree,
-                 bootstrap: bool = True):
+                 bootstrap: bool = True, codec_backend: str = "numpy"):
         """``bootstrap`` performs the paper's full synchronization (replica
         attach = checkpoint copy); streaming covers deltas thereafter."""
         self.cfg = cfg
+        self.codec_backend = codec_backend
         leaves, self.treedef = jax.tree_util.tree_flatten_with_path(
             params_like)
         self.paths = [_path_str(p) for p, _ in leaves]
@@ -101,7 +103,7 @@ class ServeReplica:
         key = (rec.group, rec.producer)
         if rec.seq < self._applied_seq.get(key, -1):    # strictly older only
             return False
-        values = decode_record(rec)
+        values = decode_record(rec, backend=self.codec_backend)
         kind = rec.meta["kind"]
         path = rec.meta["path"]
         if kind == "dense":
@@ -137,7 +139,7 @@ class ServeReplica:
                 ids_l, val_l = rows_by_path.setdefault(
                     rec.meta["path"], ([], []))
                 ids_l.append(rec.ids)
-                val_l.append(decode_record(rec))
+                val_l.append(decode_record(rec, backend=self.codec_backend))
                 self._applied_seq[key] = rec.seq
                 self.applied += 1
                 applied += 1
@@ -190,7 +192,7 @@ class ModelSyncEngine:
         # momentum optimizers keep updating previously-routed experts too
         self._expert_touched: dict[str, set[int]] = {}
         self.queue = PartitionedQueue(s.num_partitions)
-        self.transform = make_transform(s.codec)
+        self.transform = make_transform(s.codec, backend=s.codec_backend)
         self.gatherer = Gatherer(s.gather_mode, threshold=s.threshold,
                                  period=s.period)
         leaves, self.treedef = jax.tree_util.tree_flatten_with_path(params)
@@ -212,7 +214,8 @@ class ModelSyncEngine:
         self._flushes = 0
         self.pushed_bytes = 0
         self.skipped_dense = 0
-        self.replicas = [ServeReplica(cfg, params)
+        self.replicas = [ServeReplica(cfg, params,
+                                      codec_backend=s.codec_backend)
                          for _ in range(s.num_slaves)]
         self.consumers = [
             Consumer(self.queue, range(s.num_partitions))
@@ -290,8 +293,11 @@ class ModelSyncEngine:
                         self.skipped_dense += 1
                         continue
                     self._shadow[path] = leaf.copy()
+                    # copy: queued payloads must not alias leaf (identity
+                    # encode passes arrays through uncopied, and leaf can
+                    # alias the caller's live params when they are numpy)
                     payload = self.transform.encode(
-                        leaf.reshape(1, -1), {})
+                        leaf.reshape(1, -1).copy(), {})
                     rec = Record(group=group, op=op,
                                  ids=np.array([self.versions[path]],
                                               np.int64),

@@ -15,8 +15,12 @@ from jax.experimental import pallas as pl
 
 def _quant_kernel(x_ref, q_ref, s_ref):
     x = x_ref[...].astype(jnp.float32)
-    scale = jnp.maximum(jnp.abs(x).max(axis=-1, keepdims=True) / 127.0,
-                        1e-12)
+    # explicit f32-reciprocal multiply, not /127.0: XLA folds constant
+    # divisions into reciprocal multiplies anyway, and writing it out
+    # keeps kernel, ref.py oracle, and the transform's numpy mirror
+    # bit-identical
+    scale = jnp.maximum(jnp.abs(x).max(axis=-1, keepdims=True)
+                        * (1.0 / 127.0), 1e-12)
     q = jnp.clip(jnp.round(x / scale), -127.0, 127.0)
     q_ref[...] = q.astype(jnp.int8)
     s_ref[...] = scale

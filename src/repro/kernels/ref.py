@@ -36,8 +36,11 @@ def ftrl_row_update(z, n, g, *, alpha: float, beta: float, l1: float,
 
 
 def quantize_rows(x: jax.Array):
-    """Row-wise absmax int8: x (B, D) -> (q int8 (B, D), scale f32 (B, 1))."""
-    scale = jnp.maximum(jnp.abs(x).max(axis=-1, keepdims=True) / 127.0, 1e-12)
+    """Row-wise absmax int8: x (B, D) -> (q int8 (B, D), scale f32 (B, 1)).
+    Reciprocal multiply (not /127.0) to stay bit-identical with the
+    kernel under XLA's constant-division folding."""
+    scale = jnp.maximum(jnp.abs(x).max(axis=-1, keepdims=True)
+                        * (1.0 / 127.0), 1e-12)
     q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
     return q, scale.astype(jnp.float32)
 

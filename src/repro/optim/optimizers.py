@@ -47,6 +47,15 @@ class Optimizer:
     def serve_weights(self, param: jax.Array, slots: dict) -> jax.Array:
         return param
 
+    def serve_weights_np(self, param: np.ndarray, slots: dict) -> np.ndarray:
+        """CPU-native ``serve_weights`` for the sync plane's numpy codec
+        backend: the pusher encodes whole 65k-row flushes, where per-op
+        eager-JAX dispatch (not FLOPs) dominates. Default falls through to
+        the jnp path; optimizers with a numpy mirror override this."""
+        return np.asarray(self.serve_weights(
+            jnp.asarray(param),
+            {k: jnp.asarray(v) for k, v in slots.items()}))
+
     # -- batched PS row path -------------------------------------------
     def update_rows(self, w: np.ndarray, slots: dict, grads: np.ndarray,
                     step: int, *, backend: str = "numpy"):
@@ -170,11 +179,26 @@ class FTRL(Optimizer):
     def serve_weights(self, param, slots):
         return self.weights_from(slots["z"], slots["n"]).astype(param.dtype)
 
+    def serve_weights_np(self, param, slots):
+        return self._np_weights(
+            np.asarray(slots["z"]), np.asarray(slots["n"])).astype(
+            param.dtype, copy=False)
+
     def _np_weights(self, z: np.ndarray, n: np.ndarray) -> np.ndarray:
-        shrink = np.sign(z) * self.l1 - z
-        denom = (self.beta + np.sqrt(n)) / self.alpha + self.l2
-        return np.where(np.abs(z) > self.l1, shrink / denom,
-                        np.float32(0.0)).astype(np.float32)
+        # in-place ops: this runs inside the pusher's cache-blocked encode
+        # tiles, where temporaries are the difference between staying in
+        # L2 and spilling. Same op order as ``weights_from`` (jnp), so the
+        # two stay bit-compatible.
+        denom = np.sqrt(n)
+        denom += self.beta
+        denom /= self.alpha
+        denom += self.l2
+        w = np.sign(z)
+        w *= self.l1
+        w -= z
+        w /= denom
+        return np.where(np.abs(z) > self.l1, w, np.float32(0.0)).astype(
+            np.float32, copy=False)
 
     def update_rows(self, w, slots, grads, step, *, backend: str = "numpy"):
         """Batched FTRL row update. ``pallas`` fuses the whole step into

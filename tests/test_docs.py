@@ -1,0 +1,22 @@
+"""Docs integrity: every intra-repo file reference in the markdown docs
+resolves. CI runs the same checker as a standalone step (see
+.github/workflows/ci.yml, docs job)."""
+
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+DOCS = ("docs/ARCHITECTURE.md", "README.md")
+
+
+def test_architecture_doc_exists():
+    assert (ROOT / "docs" / "ARCHITECTURE.md").is_file()
+
+
+def test_doc_refs_resolve():
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "scripts" / "check_doc_refs.py"),
+         *(str(ROOT / d) for d in DOCS)],
+        capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr

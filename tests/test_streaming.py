@@ -127,6 +127,173 @@ def test_partition_selective_consumption():
     assert scatters[1].consumer.partitions == [1, 3]
 
 
+CODECS = ("identity", "cast16", "int8")
+
+
+@pytest.mark.parametrize("codec", CODECS)
+def test_codec_roundtrip_through_queue(codec):
+    """Every registered codec survives encode → Record → partitioned
+    queue → ``decode_record`` within its error bound."""
+    from repro.core import decode_record
+    w = (np.random.default_rng(1).normal(size=(17, 8)) * 3).astype(
+        np.float32)
+    t = make_transform(codec)
+    q = PartitionedQueue(2)
+    q.produce(0, Record(group="w", op="upsert",
+                        ids=np.arange(17, dtype=np.int64),
+                        payload=t.encode(w, {}), seq=0, producer=0,
+                        meta={"codec": t.name}))
+    (rec,), _ = q.consume(0, 0)
+    got = decode_record(rec)
+    if codec == "identity":
+        np.testing.assert_array_equal(got, w)
+    elif codec == "cast16":
+        np.testing.assert_allclose(got, w, rtol=1e-3, atol=1e-4)
+    else:
+        bound = np.abs(w).max(axis=-1, keepdims=True) / 254.0 + 1e-6
+        assert np.all(np.abs(got - w) <= bound)
+
+
+@pytest.mark.parametrize("codec", CODECS)
+def test_pallas_numpy_backends_bit_compatible(codec):
+    """Decoded slave weights are bit-identical between the numpy codec
+    backend and the pallas delta-codec kernel path (interpret mode
+    off-TPU) through the full push→queue→scatter spine."""
+    decoded = {}
+    for backend in ("numpy", "pallas"):
+        plan = RoutingPlan(1, 2, 4)
+        opt = get_optimizer("ftrl")
+        queue = PartitionedQueue(4)
+        master = MasterShard(0, {"w": 8}, opt)
+        col = Collector()
+        master.collector = col
+        slaves = [SlaveShard(i, {"w": 8}, codec_backend=backend)
+                  for i in range(2)]
+        scatters = [Scatter(s, queue, plan) for s in slaves]
+        pusher = Pusher(master, queue, plan,
+                        make_transform(codec, opt, backend=backend))
+        rng = np.random.default_rng(3)
+        for step in range(3):
+            ids = rng.integers(0, 500, size=64).astype(np.int64)
+            grads = rng.normal(size=(64, 8)).astype(np.float32)
+            master.push_grad("w", ids, grads)
+            g = Gatherer("realtime")
+            g.offer(col.drain())
+            pusher.push(g.flush(step), now=float(step))
+        for sc in scatters:
+            sc.poll()
+        all_ids = np.sort(master.tables["w"].all_ids())
+        decoded[backend] = np.concatenate(
+            [s.lookup("w", all_ids) for s in slaves], axis=0)
+    np.testing.assert_array_equal(decoded["numpy"], decoded["pallas"])
+
+
+def test_batched_scatter_lww_within_poll():
+    """Overlapping ids across records inside ONE poll resolve
+    last-writer-wins by arrival order — identical to sequential apply —
+    and stale redeliveries in later polls are skipped."""
+    plan, queue, master, col, slaves, scatters, pusher, _ = _mk(
+        num_slave=1, parts=1)
+    ids = np.array([5, 6], dtype=np.int64)
+
+    def rec(seq, fill):
+        return Record(group="w", op="upsert", ids=ids,
+                      payload={"values": np.full((2, 4), fill, np.float32)},
+                      seq=seq, producer=0, meta={"codec": "identity"})
+
+    queue.produce(0, rec(0, 1.0))
+    queue.produce(0, rec(1, 2.0))
+    assert scatters[0].poll() == 2
+    np.testing.assert_array_equal(slaves[0].lookup("w", ids),
+                                  np.full((2, 4), 2.0, np.float32))
+    queue.produce(0, rec(0, 1.0))            # stale redelivery
+    assert scatters[0].poll() == 0
+    np.testing.assert_array_equal(slaves[0].lookup("w", ids),
+                                  np.full((2, 4), 2.0, np.float32))
+    assert slaves[0].skipped_records == 1
+
+
+def test_cross_partition_seq_streams_independent():
+    """LWW staleness is keyed per (group, producer, partition): a flush
+    touching only partition 0 must not mark partition 1's in-flight
+    lower-seq records (disjoint ids) stale."""
+    plan, queue, master, col, slaves, scatters, pusher, _ = _mk(
+        num_slave=1, parts=2)
+
+    def rec(seq, part, ids, fill):
+        return Record(group="w", op="upsert", ids=ids,
+                      payload={"values": np.full((len(ids), 4), fill,
+                                                 np.float32)},
+                      seq=seq, producer=0,
+                      meta={"codec": "identity", "partition": part})
+
+    a, b = np.array([1], np.int64), np.array([2], np.int64)
+    queue.produce(0, rec(0, 0, a, 1.0))     # flush 0 touched both parts
+    queue.produce(1, rec(0, 1, b, 2.0))
+    queue.produce(0, rec(1, 0, a, 3.0))     # flush 1 touched only part 0
+    # consumer drains partition 0 first (seq 0 then 1), then partition 1's
+    # seq-0 record — which must still apply
+    assert scatters[0].poll() == 3
+    np.testing.assert_array_equal(slaves[0].lookup("w", a),
+                                  np.full((1, 4), 3.0, np.float32))
+    np.testing.assert_array_equal(slaves[0].lookup("w", b),
+                                  np.full((1, 4), 2.0, np.float32))
+    assert slaves[0].skipped_records == 0
+
+
+def test_pipeline_does_not_override_slave_codec_backend():
+    """Producer and consumer codec backends are independent: wiring a
+    numpy-transform pipeline must not clobber a slave's configured
+    decode backend."""
+    from repro.core.streaming import SyncPipeline
+    opt = get_optimizer("ftrl")
+    master = MasterShard(0, {"w": 4}, opt)
+    slave = SlaveShard(0, {"w": 4}, codec_backend="pallas")
+    SyncPipeline(master, [slave], PartitionedQueue(4), RoutingPlan(1, 1, 4),
+                 make_transform("int8", opt, backend="numpy"))
+    assert slave.codec_backend == "pallas"
+
+
+def test_batched_scatter_upsert_then_delete_ordering():
+    """A delete arriving after an upsert for the same id within ONE poll
+    must win — the deferred coalesced scatter may not resurrect rows the
+    delete evicted (matches sequential apply)."""
+    plan, queue, master, col, slaves, scatters, pusher, _ = _mk(
+        num_slave=1, parts=1)
+    ids = np.array([9], dtype=np.int64)
+    queue.produce(0, Record(group="w", op="upsert", ids=ids,
+                            payload={"values": np.ones((1, 4), np.float32)},
+                            seq=0, producer=0, meta={"codec": "identity"}))
+    queue.produce(0, Record(group="w", op="delete", ids=ids, payload={},
+                            seq=1, producer=0, meta={"codec": "identity"}))
+    assert scatters[0].poll() == 2
+    assert len(slaves[0].tables["w"]) == 0
+    np.testing.assert_array_equal(slaves[0].lookup("w", ids),
+                                  np.zeros((1, 4), np.float32))
+
+
+def test_vectorized_push_chunking_consistency():
+    """Partition-chunked records (small max_ids_per_record) carry
+    row-aligned payload slices: slaves converge to the same state."""
+    plan, queue, master, col, slaves, scatters, pusher, transform = _mk()
+    pusher.max_ids_per_record = 3
+    ids = np.arange(100, dtype=np.int64)
+    master.push_grad("w", ids, np.ones((100, 4), np.float32))
+    g = Gatherer("realtime")
+    g.offer(col.drain())
+    n = pusher.push(g.flush(0), now=0.0)
+    assert n > len(np.unique(plan.partition(ids)))   # chunking kicked in
+    for sc in scatters:
+        sc.poll()
+    w, slots = master.tables["w"].gather(ids)
+    serve = transform.serve_values(w, slots)
+    owner = plan.slave_shard(ids)
+    for sid, slave in enumerate(slaves):
+        mask = owner == sid
+        np.testing.assert_allclose(slave.lookup("w", ids[mask]),
+                                   serve[mask], rtol=1e-5, atol=1e-6)
+
+
 def test_ftrl_heterogeneous_parameters():
     """Slave receives derived w, not (z, n) — and they differ."""
     plan, queue, master, col, slaves, scatters, pusher, transform = _mk(
