@@ -1,0 +1,331 @@
+"""Checkpoint/recovery-plane benchmark: the cold-backup spine of the
+fault-tolerance plane (paper §4.2), measured stage by stage.
+
+Legs:
+  * save_stage — the acceptance leg: full vs delta checkpoint at swept
+    dirty-row fractions. A delta captures only rows written since the
+    previous checkpoint (``SparseTable`` mutation clock) + evicted ids,
+    so its payload should shrink ~linearly with the dirty fraction
+    (>= 5x smaller at <= 10% dirty). Reports bytes and save rows/sec.
+  * restore_stage — recover_all from a full checkpoint vs from a
+    full+deltas chain (``ColdBackup.materialize`` folds the chain), plus
+    the bit-equality check between the two restored clusters.
+  * reshard_stage — N->M recovery routing: the seed's per-(dest shard,
+    snapshot) lambda ``ids_filter`` (kept here verbatim) vs the argsort
+    ownership router (ONE ``owner_of`` + argsort pass per group).
+  * compress — raw vs int8 checkpoint payloads through the
+    ``kernels/delta_codec.py`` row codec (numpy mirror): bytes ratio,
+    save throughput, worst-case quantization error.
+
+Timing uses best-of-``--reps`` (the ``timeit`` convention).
+
+Run:  PYTHONPATH=src python benchmarks/checkpoint_path.py
+      [--rows 262144 --dim 16 --shards 4 --dst-shards 6 --smoke]
+Emits BENCH_checkpoint_path.json (or --out PATH).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+
+def best_of(fn, reps: int) -> float:
+    fn()                                              # warm-up
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+# ---------------------------------------------------------------------------
+# Baseline: the pre-refactor recover_all resharding path, verbatim — one
+# load_snapshot per (source snapshot, destination shard), each re-running
+# owner_of over the snapshot's full id set, filtering with boolean masks,
+# and upserting through SparseTable.scatter (ensure probe + write; touch
+# stats dropped — the seed bug the refactor also fixes).
+# ---------------------------------------------------------------------------
+def seed_load_snapshot(shard, snap, *, ids_filter=None):
+    shard.step = snap["step"]
+    for g, tsnap in snap["tables"].items():
+        t = shard.tables[g]
+        ids, w, slots = tsnap["ids"], tsnap["w"], tsnap["slots"]
+        if ids_filter is not None:
+            keep = ids_filter(ids)
+            ids, w = ids[keep], w[keep]
+            slots = {k: v[keep] for k, v in slots.items()}
+        t.scatter(ids, w, slots)
+
+
+def seed_lambda_recover_all(ckpt, shards, owner_of):
+    for s in shards:
+        s.clear()
+        s.alive = True
+    for snap in ckpt.shard_snaps.values():
+        for s in shards:
+            sid = s.shard_id
+            seed_load_snapshot(
+                s, snap, ids_filter=lambda ids, sid=sid:
+                owner_of(ids) == sid)
+
+
+def _sorted_state(shard, group="w"):
+    snap = shard.tables[group].snapshot()
+    order = np.argsort(snap["ids"])
+    return (snap["ids"][order], snap["w"][order],
+            {k: v[order] for k, v in snap["slots"].items()},
+            snap["last_touch"][order], snap["touch_count"][order])
+
+
+def states_bit_equal(a_shards, b_shards, group="w") -> bool:
+    for a, b in zip(a_shards, b_shards):
+        sa, sb = _sorted_state(a, group), _sorted_state(b, group)
+        if not (np.array_equal(sa[0], sb[0]) and np.array_equal(sa[1], sb[1])
+                and np.array_equal(sa[3], sb[3])
+                and np.array_equal(sa[4], sb[4])
+                and all(np.array_equal(sa[2][k], sb[2][k])
+                        for k in sa[2])):
+            return False
+    return True
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rows", type=int, default=262_144)
+    ap.add_argument("--dim", type=int, default=16)
+    # defaults follow the paper's §4.2.1d migration example: "migrate a
+    # model from cluster A with 10 shards to cluster B with 20 shards"
+    ap.add_argument("--shards", type=int, default=10)
+    ap.add_argument("--dst-shards", type=int, default=20)
+    ap.add_argument("--deltas", type=int, default=3,
+                    help="chain length (full + N deltas) for restore leg")
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes for CI")
+    ap.add_argument("--out", default="BENCH_checkpoint_path.json")
+    args = ap.parse_args()
+    if args.smoke:
+        args.rows = min(args.rows, 16_384)
+        args.reps = 2
+
+    from repro.core.fault_tolerance import (BackupPolicy, CheckpointStore,
+                                            ColdBackup, checkpoint_nbytes)
+    from repro.core.ps import MasterShard
+    from repro.core.routing import RoutingPlan
+    from repro.optim import get_optimizer
+
+    rng = np.random.default_rng(0)
+    opt = get_optimizer("ftrl")
+    groups = {"w": args.dim}
+    plan = RoutingPlan(args.shards, 1, 1)
+    ids = np.sort(rng.choice(1 << 40, size=args.rows,
+                             replace=False).astype(np.int64))
+
+    def make_shards(n):
+        return [MasterShard(i, groups, opt) for i in range(n)]
+
+    def populate(shards, step=0, subset=None):
+        sel = ids if subset is None else subset
+        grads = rng.normal(size=(4096, args.dim)).astype(np.float32)
+        for sid, sids in plan.split_by_master(sel).items():
+            for i in range(0, len(sids), 4096):
+                b = sids[i:i + 4096]
+                shards[sid].push_grad("w", b, grads[:len(b)], step=step)
+
+    def dirty_some(shards, frac, step):
+        k = max(1, int(args.rows * frac))
+        sel = np.sort(rng.choice(ids, size=k, replace=False))
+        populate(shards, step=step, subset=sel)
+        return k
+
+    shards = make_shards(args.shards)
+    populate(shards)
+    results: dict[str, dict] = {}
+
+    # -- save stage: full vs delta at swept dirty fractions ----------------
+    results["save_stage"] = {"rows": args.rows, "by_dirty_frac": {}}
+
+    def run_full():
+        cb = ColdBackup(shards, CheckpointStore(keep=2),
+                        BackupPolicy(incremental=False))
+        return cb.checkpoint(0.0, tier="local")
+
+    t_full = best_of(run_full, args.reps)
+    store_f = CheckpointStore(keep=2)
+    cb_f = ColdBackup(shards, store_f, BackupPolicy(incremental=False))
+    full_bytes = checkpoint_nbytes(store_f.load(cb_f.checkpoint(0.0)))
+    results["save_stage"]["full_seconds"] = t_full
+    results["save_stage"]["full_rows_per_sec"] = args.rows / t_full
+    results["save_stage"]["full_bytes"] = full_bytes
+
+    for frac in (0.01, 0.10):
+        store = CheckpointStore(keep=1024)
+        cb = ColdBackup(shards, store, BackupPolicy(incremental=True))
+        base_v = cb.checkpoint(0.0, tier="remote")
+        marks = {sid: dict(m) for sid, m in cb._marks.items()}
+        dmarks = {sid: dict(m) for sid, m in cb._dense_marks.items()}
+        k = dirty_some(shards, frac, step=1)
+
+        def run_delta():
+            # re-base onto the full checkpoint so every rep captures the
+            # same dirty set (checkpointing advances the marks)
+            cb._marks = {sid: dict(m) for sid, m in marks.items()}
+            cb._dense_marks = {sid: dict(m) for sid, m in dmarks.items()}
+            cb._last_version = base_v
+            cb._force_full = False
+            return cb.checkpoint(1.0, tier="local")
+
+        t_delta = best_of(run_delta, args.reps)
+        delta_bytes = checkpoint_nbytes(store.load(run_delta()))
+        results["save_stage"]["by_dirty_frac"][f"{frac:.2f}"] = {
+            "dirty_rows": k,
+            "delta_seconds": t_delta,
+            "delta_dirty_rows_per_sec": k / t_delta,
+            "delta_bytes": delta_bytes,
+            "full_over_delta_bytes": full_bytes / delta_bytes,
+            "full_over_delta_seconds": t_full / t_delta,
+        }
+    results["save_stage"]["full_over_delta_bytes_at_10pct"] = \
+        results["save_stage"]["by_dirty_frac"]["0.10"][
+            "full_over_delta_bytes"]
+
+    # -- restore stage: full vs full+deltas chain --------------------------
+    store = CheckpointStore(keep=1024)
+    cb = ColdBackup(shards, store, BackupPolicy(incremental=True))
+    cb.checkpoint(0.0, tier="remote")                   # full base
+    for i in range(args.deltas):
+        dirty_some(shards, 0.05, step=2 + i)
+        v_chain = cb.checkpoint(1.0 + i, tier="local")
+    v_full = cb.checkpoint(10.0, tier="remote")         # same state, full
+
+    def run_restore_full():
+        cb.recover_all(make_shards(args.shards), version=v_full)
+
+    def run_restore_chain():
+        cb.recover_all(make_shards(args.shards), version=v_chain)
+
+    t_rf = best_of(run_restore_full, args.reps)
+    t_rc = best_of(run_restore_chain, args.reps)
+    a, b = make_shards(args.shards), make_shards(args.shards)
+    cb.recover_all(a, version=v_chain)
+    cb.recover_all(b, version=v_full)
+    results["restore_stage"] = {
+        "chain_links": 1 + args.deltas,
+        "restore_full_rows_per_sec": args.rows / t_rf,
+        "restore_chain_rows_per_sec": args.rows / t_rc,
+        "chain_over_full_seconds": t_rc / t_rf,
+        "chain_bit_equals_full": states_bit_equal(a, b),
+    }
+
+    # -- reshard stage: seed lambda filter vs argsort ownership routing ----
+    plan_dst = RoutingPlan(args.dst_shards, 1, 1)
+    ckpt_full = store.load(v_full)
+
+    def run_seed_reshard():
+        seed_lambda_recover_all(ckpt_full, make_shards(args.dst_shards),
+                                plan_dst.master_shard)
+
+    def run_vec_reshard():
+        cb.recover_all(make_shards(args.dst_shards), version=v_full,
+                       owner_of=plan_dst.master_shard)
+
+    t_seed = best_of(run_seed_reshard, max(1, args.reps // 2))
+    t_vec = best_of(run_vec_reshard, args.reps)
+    sa, sb = make_shards(args.dst_shards), make_shards(args.dst_shards)
+    seed_lambda_recover_all(ckpt_full, sa, plan_dst.master_shard)
+    cb.recover_all(sb, version=v_full, owner_of=plan_dst.master_shard)
+    # seed drops touch stats, so compare ids/values only
+    values_equal = all(
+        np.array_equal(_sorted_state(a)[0], _sorted_state(b)[0])
+        and np.array_equal(_sorted_state(a)[1], _sorted_state(b)[1])
+        and all(np.array_equal(_sorted_state(a)[2][k],
+                               _sorted_state(b)[2][k])
+                for k in _sorted_state(a)[2])
+        for a, b in zip(sa, sb))
+
+    # routing stage alone (no table loads): the O(dst x snaps) lambda
+    # sweep vs ONE owner_of + argsort + take over the merged row set
+    from repro.core.fault_tolerance import (iter_owner_rows,
+                                            merge_shard_tables)
+    state = cb.materialize(v_full)
+
+    def route_seed():
+        for snap in ckpt_full.shard_snaps.values():
+            for sid in range(args.dst_shards):
+                for tsnap in snap["tables"].values():
+                    keep = plan_dst.master_shard(tsnap["ids"]) == sid
+                    (tsnap["ids"][keep], tsnap["w"][keep],
+                     {k: v[keep] for k, v in tsnap["slots"].items()})
+
+    def route_vec():
+        for rows in merge_shard_tables(state["shard_snaps"]).values():
+            owner = plan_dst.master_shard(rows["ids"])
+            for _dst, _part in iter_owner_rows(rows, owner):
+                pass
+
+    t_rseed = best_of(route_seed, max(1, args.reps // 2))
+    t_rvec = best_of(route_vec, args.reps)
+    results["reshard_stage"] = {
+        "src_shards": args.shards, "dst_shards": args.dst_shards,
+        "seed_lambda_rows_per_sec": args.rows / t_seed,
+        "argsort_rows_per_sec": args.rows / t_vec,
+        "speedup": t_seed / t_vec,
+        "routing_only_speedup": t_rseed / t_rvec,
+        "matches_seed_values": values_equal,
+    }
+
+    # -- compression: raw vs int8 checkpoint payloads ----------------------
+    def run_int8():
+        cb8 = ColdBackup(shards, CheckpointStore(keep=2),
+                         BackupPolicy(incremental=False, compress="int8"))
+        return cb8.checkpoint(0.0, tier="local")
+
+    t_int8 = best_of(run_int8, max(1, args.reps // 2))
+    store8 = CheckpointStore(keep=2)
+    cb8 = ColdBackup(shards, store8, BackupPolicy(incremental=False,
+                                                  compress="int8"))
+    v8 = cb8.checkpoint(0.0)
+    int8_bytes = checkpoint_nbytes(store8.load(v8))
+    rec = make_shards(args.shards)
+    cb8.recover_all(rec, version=v8)
+    err = 0.0
+    for s_src, s_rec in zip(shards, rec):
+        for name in ("z", "n"):
+            a_sl = _sorted_state(s_src)[2][name]
+            b_sl = _sorted_state(s_rec)[2][name]
+            bound = np.abs(a_sl).max(axis=1, keepdims=True) / 127.0 + 1e-7
+            err = max(err, float((np.abs(a_sl - b_sl) / bound).max()))
+    results["compress"] = {
+        "raw_bytes": full_bytes,
+        "int8_bytes": int8_bytes,
+        "compression": full_bytes / int8_bytes,
+        "int8_rows_per_sec": args.rows / t_int8,
+        "max_quant_error_in_row_bounds": err,   # <= 1.0 == within absmax/127
+    }
+
+    out = {
+        "config": {"rows": args.rows, "dim": args.dim,
+                   "shards": args.shards, "dst_shards": args.dst_shards,
+                   "deltas": args.deltas, "reps": args.reps,
+                   "optimizer": "ftrl", "smoke": args.smoke},
+        "results": results,
+    }
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+    print(json.dumps(out, indent=2))
+    print(f"\nfull/delta bytes at 10% dirty: "
+          f"{results['save_stage']['full_over_delta_bytes_at_10pct']:.1f}x; "
+          f"chain bit-equals full: "
+          f"{results['restore_stage']['chain_bit_equals_full']}; "
+          f"reshard argsort speedup: "
+          f"{results['reshard_stage']['speedup']:.1f}x; int8 compression: "
+          f"{results['compress']['compression']:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

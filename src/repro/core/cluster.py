@@ -55,6 +55,8 @@ class ClusterConfig:
     local_ckpt_interval: float = 30.0
     remote_ckpt_interval: float = 600.0
     ckpt_root: Optional[str] = None
+    ckpt_incremental: bool = True   # local cadence writes delta checkpoints
+    ckpt_compress: str = "none"     # none | int8 (delta_codec row codec)
     downgrade_metric: str = "logloss"
     downgrade_threshold: float = 1.5
     downgrade_window: int = 10
@@ -123,8 +125,11 @@ class WeiPSCluster:
         self.store = CheckpointStore(c.ckpt_root)
         self.cold_backup = ColdBackup(
             self.masters, self.store,
-            BackupPolicy(c.local_ckpt_interval, c.remote_ckpt_interval),
-            queue=self.queue, rng=random.Random(c.seed))
+            BackupPolicy(c.local_ckpt_interval, c.remote_ckpt_interval,
+                         incremental=c.ckpt_incremental,
+                         compress=c.ckpt_compress),
+            queue=self.queue, rng=random.Random(c.seed),
+            codec_backend=c.codec_backend)
         self.versions = VersionManager(self.store)
         self.downgrader = DominoDowngrade(
             SmoothedThresholdTrigger(
@@ -278,31 +283,73 @@ class WeiPSCluster:
         self.scheduler.publish_version(self.cfg.name, v)
         return v
 
+    def _serve_state(self, version: Optional[int] = None) -> dict:
+        """Materialize a checkpoint chain into serving-plane rows: per
+        group, the merged columnar row set across all master shards with
+        ONE serve transform (train state -> inference weights) applied,
+        plus the chain's queue offsets and merged dense bank."""
+        from repro.core.fault_tolerance import merge_dense, merge_shard_tables
+        state = self.cold_backup.materialize(version)
+        groups = {}
+        for g, rows in merge_shard_tables(state["shard_snaps"]).items():
+            serve = self.transform.serve_values(rows["w"], rows["slots"])
+            groups[g] = (rows["ids"], serve)
+        dense = {"tensors": {}, "slots": {}, "versions": {}}
+        for snap in state["shard_snaps"].values():
+            merge_dense(dense, snap["dense"])
+        return {"groups": groups, "dense": dense,
+                "queue_offsets": state["queue_offsets"],
+                "version": state["version"]}
+
+    def _load_serve_rows(self, shards: list, ids: np.ndarray,
+                         group: str, serve: np.ndarray) -> None:
+        """Route serve rows to slave shards with one argsort ownership
+        pass (the seed looped num_slave boolean masks per snapshot)."""
+        from repro.core.fault_tolerance import iter_owner_segments
+        by_sid: dict[int, list] = {}
+        for shard in shards:
+            by_sid.setdefault(shard.shard_id, []).append(shard)
+        for sid, idx in iter_owner_segments(self.plan.slave_shard(ids)):
+            reps = by_sid.get(sid, ())
+            if not reps:
+                continue
+            seg_ids = ids.take(idx, mode="clip")
+            seg_serve = serve.take(idx, axis=0, mode="clip")
+            for shard in reps:
+                shard.tables[group].scatter(seg_ids, seg_serve)
+
+    @staticmethod
+    def _apply_dense_state(shard: SlaveShard, dense: dict) -> None:
+        """Install a materialized dense bank on a serving replica (the
+        slave holds flattened decoded tensors + version counters, so
+        replayed dense records older than the restored version LWW-skip
+        and newer ones apply)."""
+        for name, t in dense["tensors"].items():
+            shard.dense[name] = np.asarray(t, np.float32).reshape(1, -1)
+            shard.dense_versions[name] = dense["versions"][name]
+
     def _hot_switch(self, ckpt: Checkpoint) -> None:
         """Downgrade execution: rebuild slave serve state from the
-        checkpoint (master-state → serve transform), then seek every
-        scatter to the checkpoint's queue offsets for consistent replay."""
-        for rs in self.replica_sets:
-            for shard in rs.replicas:
-                for g, dim in self.groups.items():
-                    from repro.core.ps import SparseTable
-                    shard.tables[g] = SparseTable(
-                        dim, backend=self.ccfg.ps_backend)
-                shard._applied_seq = {}
-        for snap in ckpt.shard_snaps.values():
-            for g, tsnap in snap["tables"].items():
-                ids, w, slots = tsnap["ids"], tsnap["w"], tsnap["slots"]
-                if len(ids) == 0:
-                    continue
-                serve = self.transform.serve_values(w, slots)
-                owner = self.plan.slave_shard(ids)
-                for sid, rs in enumerate(self.replica_sets):
-                    mask = owner == sid
-                    if mask.any():
-                        for shard in rs.replicas:
-                            shard.tables[g].scatter(ids[mask], serve[mask])
+        checkpoint *chain* (full + deltas materialized by the cold-backup
+        plane, master-state -> serve transform), then seek every scatter
+        to the checkpoint's queue offsets for consistent replay."""
+        from repro.core.ps import SparseTable
+        state = self._serve_state(ckpt.version)
+        replicas = [shard for rs in self.replica_sets
+                    for shard in rs.replicas]
+        for shard in replicas:
+            for g, dim in self.groups.items():
+                shard.tables[g] = SparseTable(
+                    dim, backend=self.ccfg.ps_backend)
+            shard._applied_seq = {}
+            shard.dense = {}
+            shard.dense_versions = {}
+            self._apply_dense_state(shard, state["dense"])
+        for g, (ids, serve) in state["groups"].items():
+            if len(ids):
+                self._load_serve_rows(replicas, ids, g, serve)
         for sc in self.scatters:
-            sc.consumer.seek(ckpt.queue_offsets)
+            sc.seek(ckpt.queue_offsets)
 
     def downgrade_check(self, now: float) -> Optional[int]:
         return self.downgrader.maybe_downgrade(now, self.validator)
@@ -324,6 +371,45 @@ class WeiPSCluster:
             if len(ids):
                 m.collector.record(group, ids, "upsert")
         return v
+
+    def _bootstrap_replica(self, shard: SlaveShard) -> Optional[dict]:
+        """Checkpoint-restore bootstrap for a fresh serving replica
+        (§4.2.2, via the cold-backup plane instead of a peer full copy):
+        load the latest checkpoint chain, keep only rows this shard owns,
+        and return the stored queue offsets — the caller's Scatter
+        replays the stream from there (streaming catch-up)."""
+        if self.store.latest() is None:
+            return None
+        state = self._serve_state()
+        for g, (ids, serve) in state["groups"].items():
+            if len(ids):
+                self._load_serve_rows([shard], ids, g, serve)
+        self._apply_dense_state(shard, state["dense"])
+        return dict(state["queue_offsets"])
+
+    def add_slave_replica(self, shard_id: int) -> SlaveShard:
+        """Grow a replica set online: checkpoint-restore + streaming
+        catch-up when a checkpoint exists, else full copy from a healthy
+        peer (whose consumer offsets the new Scatter inherits)."""
+        c = self.ccfg
+        rs = self.replica_sets[shard_id]
+        shard = SlaveShard(shard_id, self.groups, backend=c.ps_backend,
+                           codec_backend=c.codec_backend)
+        offsets = rs.add_replica(shard, bootstrap=self._bootstrap_replica)
+        if offsets is None:
+            # peer-copied state already reflects everything the peer's
+            # scatter applied — start the new consumer there, not at 0
+            for sc in self.scatters:
+                if sc.shard in rs.replicas and sc.shard is not shard \
+                        and sc.shard.alive:
+                    offsets = sc.offsets()
+                    break
+        sc = Scatter(shard, self.queue, self.plan, offsets=offsets)
+        self.scatters.append(sc)
+        self.scheduler.register(ComponentInfo(
+            "slave", shard_id, len(rs.replicas) - 1))
+        sc.poll()          # streaming catch-up: ckpt offsets -> queue head
+        return shard
 
     def kill_slave_replica(self, shard_id: int, replica_idx: int) -> None:
         self.replica_sets[shard_id].replicas[replica_idx].kill()

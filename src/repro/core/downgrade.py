@@ -1,5 +1,12 @@
 """Domino downgrade (paper §4.3.2): smoothed-threshold trigger + hot version
 switch back to a stable checkpointed version, with queue-offset replay.
+
+Any stored version qualifies as a switch target — full or delta: the
+executor's ``switch_fn`` restores through the cold-backup chain
+(``ColdBackup.materialize`` folds full+deltas into full-equivalent state)
+and seeks the serving consumers to the checkpoint's queue offsets, so
+streaming replay resumes exactly where the restored state left off. See
+``docs/FAULT_TOLERANCE.md`` for the runbook.
 """
 
 from __future__ import annotations
@@ -63,8 +70,9 @@ class VersionManager:
 
 class DominoDowngrade:
     """Trigger + execution. ``switch_fn(ckpt)`` performs the hot switch:
-    reload slave state from the checkpoint and seek scatters to the stored
-    queue offsets so streaming resumes consistently."""
+    reload slave state from the checkpoint (materializing its full+delta
+    chain — see ``WeiPSCluster._hot_switch``) and seek scatters to the
+    stored queue offsets so streaming resumes consistently."""
 
     def __init__(self, trigger: SmoothedThresholdTrigger,
                  versions: VersionManager,

@@ -3,7 +3,10 @@
 The prediction made on each training batch *before* its gradients are
 applied is the evaluation signal: real-time (the data is the live stream)
 and lossless (the same samples still train the model afterwards). Metrics
-are kept as time series with windowed smoothing for the downgrade trigger.
+are kept as time series with windowed smoothing for the downgrade trigger
+(core/downgrade.py; runbook in docs/FAULT_TOLERANCE.md). Validation is
+in-process and synchronous with the training step — there is no separate
+evaluator service in this simulation.
 """
 
 from __future__ import annotations

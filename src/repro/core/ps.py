@@ -60,6 +60,14 @@ class SparseTable:
                        for n in self.slot_names}
         self.last_touch = np.zeros((cap,), dtype=np.int64)
         self.touch_count = np.zeros((cap,), dtype=np.int64)
+        # dirty-row bookkeeping for incremental checkpoints: a per-table
+        # mutation clock stamped onto every written row, plus a log of
+        # (clock, ids) evictions so a delta can replay deletes. Same
+        # pattern as the streaming plane's touch/seq tracking, but keyed
+        # to the table (not the queue) so checkpoints need no queue scan.
+        self.row_version = np.zeros((cap,), dtype=np.int64)
+        self._mut = 0
+        self._evict_log: list[tuple[int, np.ndarray]] = []
 
     # -- capacity ---------------------------------------------------------
     def __len__(self) -> int:
@@ -77,6 +85,7 @@ class SparseTable:
         self._id_of = grow(self._id_of, fill=_NO_ID)
         self.last_touch = grow(self.last_touch)
         self.touch_count = grow(self.touch_count)
+        self.row_version = grow(self.row_version)
 
     def _alloc_slots(self, k: int) -> np.ndarray:
         """Pop ``k`` arena slots: freed slots first (LIFO), then fresh."""
@@ -119,6 +128,8 @@ class SparseTable:
             a[new_sl] = 0.0
         self.last_touch[new_sl] = 0
         self.touch_count[new_sl] = 0
+        self._mut += 1
+        self.row_version[new_sl] = self._mut
         sl[miss] = new_sl[np.searchsorted(new_ids, ids[miss])]
         return sl
 
@@ -136,6 +147,8 @@ class SparseTable:
             self._map.delete(uniq[have])
             self._id_of[s] = _NO_ID
             self._free = np.concatenate([self._free, s])
+            self._mut += 1
+            self._evict_log.append((self._mut, uniq[have].copy()))
         return int(have.sum())
 
     # -- slot-level row access (shared by gather/scatter/apply_batch) -----
@@ -172,6 +185,8 @@ class SparseTable:
                 self._slots[n][sl] = v
         self.last_touch[sl] = step
         self.touch_count[sl] += 1
+        self._mut += 1
+        self.row_version[sl] = self._mut
 
     # -- access -------------------------------------------------------------
     def gather(self, ids: np.ndarray, *, create: bool = False,
@@ -220,23 +235,67 @@ class SparseTable:
         return live * per_row
 
     # -- snapshot (checkpointing) -------------------------------------------
+    @property
+    def version(self) -> int:
+        """Mutation-clock reading; rows with ``row_version > v`` are dirty
+        relative to a snapshot taken at clock ``v``."""
+        return self._mut
+
     def snapshot(self) -> dict:
         ids = self.all_ids()
         sl = self.lookup(ids)                     # one probe for everything
         w, slots = self.read_rows(sl)
         return {"ids": ids, "w": w, "slots": slots,
                 "last_touch": self.last_touch[sl].copy(),
-                "touch_count": self.touch_count[sl].copy()}
+                "touch_count": self.touch_count[sl].copy(),
+                "version": self._mut}
+
+    def delta_snapshot(self, since: int) -> dict:
+        """Columnar snapshot of ONLY the rows written after clock ``since``
+        plus the ids evicted after it — the payload of an incremental
+        checkpoint. One vectorized scan of the reverse map + row_version;
+        no hash probes."""
+        live = self._id_of[:self._top] != _NO_ID
+        sl = np.flatnonzero(live & (self.row_version[:self._top] > since))
+        w, slots = self.read_rows(sl)
+        dead = [ids for mut, ids in self._evict_log if mut > since]
+        deleted = np.unique(np.concatenate(dead)) if dead else \
+            np.empty(0, np.int64)
+        return {"ids": self._id_of[sl].copy(), "w": w, "slots": slots,
+                "last_touch": self.last_touch[sl].copy(),
+                "touch_count": self.touch_count[sl].copy(),
+                "deleted": deleted, "since": since, "version": self._mut}
+
+    def trim_evict_log(self, before: int) -> None:
+        """Drop eviction entries at or below clock ``before`` — safe once
+        every future delta will be taken against a mark >= ``before``."""
+        self._evict_log = [(m, i) for m, i in self._evict_log if m > before]
+
+    def load_rows(self, rows: dict) -> None:
+        """Bulk-insert snapshot rows whose ids are unique and NOT yet
+        present — the restore hot path (tables start cleared). Skips the
+        ensure probe, the miss-path np.unique sort, and the zero-init
+        write that ``ensure`` + ``write_rows`` would pay."""
+        ids = np.asarray(rows["ids"], dtype=np.int64)
+        if not len(ids):
+            return
+        sl = self._alloc_slots(len(ids))
+        self._map.insert(ids, sl)
+        self._id_of[sl] = ids
+        self._w[sl] = rows["w"]
+        for n, v in rows["slots"].items():
+            self._slots[n][sl] = v
+        self.last_touch[sl] = rows["last_touch"]
+        self.touch_count[sl] = rows["touch_count"]
+        self._mut += 1
+        self.row_version[sl] = self._mut
 
     @classmethod
     def restore(cls, snap: dict, dim: int, slot_names: tuple[str, ...],
                 dtype=np.float32, backend: str = "numpy") -> "SparseTable":
         t = cls(dim, slot_names, init_capacity=max(16, len(snap["ids"])),
                 dtype=dtype, backend=backend)
-        sl = t.ensure(snap["ids"])                # one probe for everything
-        t.write_rows(sl, snap["w"], snap["slots"])
-        t.last_touch[sl] = snap["last_touch"]
-        t.touch_count[sl] = snap["touch_count"]
+        t.load_rows(snap)                 # probe-free insert: table is new
         return t
 
 
@@ -261,6 +320,18 @@ class DenseBank:
             "slots": {k: {n: a.copy() for n, a in s.items()}
                       for k, s in self.slots.items()},
             "versions": dict(self.versions),
+        }
+
+    def snapshot_delta(self, since: dict[str, int]) -> dict:
+        """Same format as ``snapshot`` but holding only tensors whose
+        version counter moved past ``since[name]``."""
+        names = [k for k, v in self.versions.items()
+                 if v > since.get(k, -1)]
+        return {
+            "tensors": {k: self.tensors[k].copy() for k in names},
+            "slots": {k: {n: a.copy() for n, a in self.slots[k].items()}
+                      for k in names if k in self.slots},
+            "versions": {k: self.versions[k] for k in names},
         }
 
     @classmethod
@@ -358,20 +429,58 @@ class MasterShard:
         return {
             "shard_id": self.shard_id,
             "step": self.step,
+            "kind": "full",
             "tables": {g: t.snapshot() for g, t in self.tables.items()},
             "dense": self.dense.snapshot(),
         }
 
+    def delta_snapshot(self, marks: dict[str, int],
+                       dense_marks: dict[str, int]) -> dict:
+        """Incremental snapshot: per group, only the rows written after
+        ``marks[group]`` (the table's mutation clock at the previous
+        checkpoint) plus the ids evicted since; dense tensors only where
+        the version counter moved."""
+        return {
+            "shard_id": self.shard_id,
+            "step": self.step,
+            "kind": "delta",
+            "tables": {g: t.delta_snapshot(marks.get(g, 0))
+                       for g, t in self.tables.items()},
+            "dense": self.dense.snapshot_delta(dense_marks),
+        }
+
+    def load_table_rows(self, group: str, rows: dict) -> None:
+        """Bulk-load columnar rows (ids/w/slots + touch stats) into one
+        group — the unit the vectorized recovery router emits. An empty
+        table takes the probe-free ``SparseTable.load_rows`` insert; a
+        live table (merging load) falls back to ensure + write."""
+        if not len(rows["ids"]):
+            return
+        t = self.tables[group]
+        if len(t) == 0:
+            t.load_rows(rows)
+            return
+        sl = t.ensure(rows["ids"])
+        t.write_rows(sl, rows["w"], rows["slots"])
+        t.last_touch[sl] = rows["last_touch"]
+        t.touch_count[sl] = rows["touch_count"]
+
     def load_snapshot(self, snap: dict, *, ids_filter=None) -> None:
         self.step = snap["step"]
         for g, tsnap in snap["tables"].items():
-            t = self.tables[g]
-            ids, w, slots = tsnap["ids"], tsnap["w"], tsnap["slots"]
+            rows = {k: tsnap[k] for k in
+                    ("ids", "w", "slots", "last_touch", "touch_count")}
             if ids_filter is not None:
-                keep = ids_filter(ids)
-                ids, w = ids[keep], w[keep]
-                slots = {k: v[keep] for k, v in slots.items()}
-            t.scatter(ids, w, slots)
+                keep = ids_filter(rows["ids"])
+                rows = {"slots": {k: v[keep]
+                                  for k, v in rows["slots"].items()},
+                        **{k: rows[k][keep] for k in
+                           ("ids", "w", "last_touch", "touch_count")}}
+            self.load_table_rows(g, rows)
+        # a filtered load is a partial/routed restore — table rows only;
+        # dense tensors follow the unfiltered owner-shard load
+        if ids_filter is None and snap.get("dense") is not None:
+            self.dense = DenseBank.restore(snap["dense"])
 
     def kill(self) -> None:
         self.alive = False

@@ -12,7 +12,10 @@
                model transform (FTRL z,n→w, dtype cast, int8 quant),
                serializes, and produces to the ID-routed queue partition.
   Scatter    — per slave shard; consumes its partitions and applies records
-               idempotently (LWW by seq).
+               idempotently (LWW by seq). Its consumer offsets are embedded
+               in every checkpoint and ``seek``-able, so recovery, replica
+               bootstrap, and domino downgrade replay the stream exactly
+               from the restored state (core/fault_tolerance.py).
 
 The push and scatter stages are fully batched (no per-partition/per-chunk
 Python): one gather + one encode per (group, op), vectorized argsort
@@ -303,6 +306,12 @@ class Scatter:
 
     def offsets(self) -> dict[int, int]:
         return dict(self.consumer.offsets)
+
+    def seek(self, offsets: dict[int, int]) -> None:
+        """Rewind/forward this consumer to checkpointed queue offsets —
+        the replay handle of the recovery and downgrade paths (records
+        are full-value upserts, so replay is idempotent)."""
+        self.consumer.seek(offsets)
 
 
 def _filter_payload(payload: dict, keep: np.ndarray) -> dict:

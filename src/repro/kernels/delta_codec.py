@@ -4,6 +4,13 @@ stage of the WeiPS pusher (paper §4.1.3), 4x wire-bandwidth reduction.
 Quantize: one VMEM pass computes the per-row absmax scale and the int8
 payload; dequantize is the scatter-side inverse. Row blocks of
 (block_rows, D) keep the reduction in-register (D is last-dim/lane-major).
+
+Two consumers share this kernel (both through ``kernels/ops.py``, with a
+bit-identical numpy mirror in ``core/transform.py``): the streaming sync
+codec (``Int8Transform``) and the checkpoint compressor
+(``BackupPolicy.compress="int8"`` in ``core/fault_tolerance.py``), which
+packs full/delta checkpoint row payloads with the same arithmetic so
+compressed chain restores stay bit-equal to compressed full restores.
 """
 
 from __future__ import annotations
