@@ -6,7 +6,7 @@ from repro.core.cluster import ClusterConfig, WeiPSCluster
 from repro.core.hashmap import IdHashMap
 from repro.core.ps import DenseBank, MasterShard, SlaveShard, SparseTable
 from repro.core.queue import Consumer, PartitionedQueue, Record
-from repro.core.routing import RoutingPlan, reshard_plan
+from repro.core.routing import RoutingPlan, owner_segments, reshard_plan
 from repro.core.streaming import (Collector, Gatherer, Pusher, Scatter,
                                   SyncPipeline)
 from repro.core.transform import (Cast16Transform, Int8Transform, Transform,
@@ -16,7 +16,8 @@ __all__ = [
     "ClusterConfig", "WeiPSCluster", "DenseBank", "IdHashMap", "MasterShard",
     "SlaveShard",
     "SparseTable", "Consumer", "PartitionedQueue", "Record", "RoutingPlan",
-    "reshard_plan", "Collector", "Gatherer", "Pusher", "Scatter",
+    "owner_segments", "reshard_plan", "Collector", "Gatherer", "Pusher",
+    "Scatter",
     "SyncPipeline", "Cast16Transform", "Int8Transform", "Transform",
     "decode_record", "make_transform",
 ]

@@ -32,6 +32,8 @@ from repro.core.streaming import Collector, Gatherer, Pusher, Scatter
 from repro.core.transform import make_transform
 from repro.models import ctr as ctr_model
 from repro.optim import get_optimizer
+from repro.serving import RowRouter, ServingPlane
+from repro.serving.scheduler import DEFAULT_BUCKETS
 
 
 def _make_optimizer(cfg: CTRConfig):
@@ -63,6 +65,11 @@ class ClusterConfig:
     feature_min_count: int = 1
     feature_ttl_steps: int = 100_000
     ps_backend: str = "numpy"    # numpy | pallas (sparse-row engine)
+    # serving plane (src/repro/serving/)
+    serve_max_lag: Optional[int] = None   # staleness bound in queue records;
+    #                                       laggier replicas are skipped
+    serve_cache_rows: int = 1 << 20       # serve-cache arena bound per scenario
+    serve_buckets: tuple = DEFAULT_BUCKETS  # predict micro-batch bucket sizes
     seed: int = 0
 
 
@@ -111,14 +118,30 @@ class WeiPSCluster:
         self.replica_sets: list[ReplicaSet] = []
         self.scatters: list[Scatter] = []
         for sid in range(c.num_slave):
-            replicas = []
-            for rid in range(c.num_replicas):
-                shard = SlaveShard(sid, self.groups, backend=c.ps_backend,
-                                   codec_backend=c.codec_backend)
-                replicas.append(shard)
-                self.scatters.append(Scatter(shard, self.queue, self.plan))
+            rs = ReplicaSet([SlaveShard(sid, self.groups,
+                                        backend=c.ps_backend,
+                                        codec_backend=c.codec_backend)
+                             for _ in range(c.num_replicas)])
+            for rid, shard in enumerate(rs.replicas):
+                sc = Scatter(shard, self.queue, self.plan)
+                self.scatters.append(sc)
+                rs.attach_scatter(shard, sc)   # staleness signal for picks
                 self.scheduler.register(ComponentInfo("slave", sid, rid))
-            self.replica_sets.append(ReplicaSet(replicas))
+            self.replica_sets.append(rs)
+
+        # the serving subsystem: vectorized pull + serve cache +
+        # micro-batching scheduler + scenario registry. Its RowRouter is
+        # shared with the training-plane pull (see _pull_rows) — the two
+        # planes run the same routing/gather code, which is the symmetry
+        # the paper names.
+        self.serving = ServingPlane(
+            self.plan, self.replica_sets, self.groups,
+            max_replica_lag=c.serve_max_lag,
+            cache_rows=c.serve_cache_rows, buckets=c.serve_buckets)
+        self.add_scenario(model_cfg)          # default scenario
+        for rs in self.replica_sets:
+            for shard in rs.replicas:
+                shard.on_apply = self.serving.on_applied
 
         # ---- stability machinery ----------------------------------------
         self.validator = ProgressiveValidator()
@@ -145,19 +168,18 @@ class WeiPSCluster:
     # training plane
     # ------------------------------------------------------------------
     def _pull_rows(self, ids: np.ndarray) -> dict[str, np.ndarray]:
-        """Gather (B, F, dim) row tensors for every group from masters."""
+        """Gather (B, F, dim) row tensors for every group from masters —
+        the training-plane pull, running the SAME argsort ownership pass
+        and bulk gather as the serving plane (``RowRouter``); only the
+        fetch differs (master pull with row creation vs. replica read).
+        The seed looped num_groups × num_masters boolean masks here."""
         b, f = ids.shape
-        flat = ids.reshape(-1)
-        uniq, inverse = np.unique(flat, return_inverse=True)
-        by_master = self.plan.split_by_master(uniq)
-        rows = {}
-        for group, dim in self.groups.items():
-            vals = np.zeros((len(uniq), dim), np.float32)
-            for mid, mids in by_master.items():
-                pos = np.searchsorted(uniq, mids)
-                vals[pos] = self.masters[mid].pull(group, mids)
-            rows[group] = vals[inverse].reshape(b, f, dim)
-        return rows, uniq, inverse
+        uniq, inverse = RowRouter.unique(ids)
+        vals = self.serving.router.pull(
+            uniq, self.groups, self.plan.master_shard(uniq),
+            lambda mid, mids: {g: self.masters[mid].pull(g, mids)
+                               for g in self.groups})
+        return RowRouter.expand(vals, inverse, (b, f)), uniq, inverse
 
     def train_on_batch(self, ids: np.ndarray, y: np.ndarray,
                        now: float = 0.0) -> dict:
@@ -229,40 +251,35 @@ class WeiPSCluster:
     # ------------------------------------------------------------------
     # serving plane
     # ------------------------------------------------------------------
-    def serve_rows(self, ids: np.ndarray) -> dict[str, np.ndarray]:
-        """Predictor pull path: slave replica lookup with failover."""
-        b, f = ids.shape
-        flat = ids.reshape(-1)
-        uniq, inverse = np.unique(flat, return_inverse=True)
-        owner = self.plan.slave_shard(uniq)
-        rows = {}
-        for group, dim in self.groups.items():
-            vals = np.zeros((len(uniq), dim), np.float32)
-            for sid in range(self.ccfg.num_slave):
-                mask = owner == sid
-                if mask.any():
-                    vals[mask] = self.replica_sets[sid].lookup(
-                        group, uniq[mask])
-            rows[group] = vals[inverse].reshape(b, f, dim)
-        return rows
+    def serve_rows(self, ids: np.ndarray,
+                   scenario: Optional[str] = None) -> dict[str, np.ndarray]:
+        """Predictor pull path — delegated to the serving subsystem:
+        serve-cache probe, then one argsort ownership pass over the
+        misses feeding lag-bounded replica reads with failover."""
+        return self.serving.serve_rows(ids, scenario)
 
-    def predict(self, ids: np.ndarray) -> np.ndarray:
-        rows = self.serve_rows(ids)
-        dense = self._serve_dense()
-        return np.asarray(self._predict(
-            {k: jnp.asarray(v) for k, v in rows.items()},
-            {k: jnp.asarray(v) for k, v in dense.items()}))
+    def predict(self, ids: np.ndarray,
+                scenario: Optional[str] = None) -> np.ndarray:
+        """Serving-plane predict through the micro-batching scheduler
+        (pad-to-bucket, one jit compile per bucket shape)."""
+        return self.serving.predict(ids, scenario)
+
+    def add_scenario(self, cfg: CTRConfig, *,
+                     name: Optional[str] = None):
+        """Serve an additional model scenario (a group subset of the
+        shared PS — e.g. an LR head off an FM store) with its own predict
+        fn, cache namespace, scheduler, and metrics; membership is
+        published to the coordination registry."""
+        scn = self.serving.add_scenario(cfg, name=name)
+        self.scheduler.register_scenario(
+            self.cfg.name, scn.name,
+            {"model_type": cfg.model_type, "groups": sorted(scn.groups)})
+        return scn
 
     def _serve_dense(self) -> dict[str, np.ndarray]:
-        if not self.dense:
-            return {}
-        out = {}
-        rep = self.replica_sets[0].healthy()[0]
-        for name, shape in ctr_model.dense_shapes(self.cfg).items():
-            v = rep.dense.get(name)
-            out[name] = (v.reshape(shape) if v is not None
-                         else np.zeros(shape, np.float32))
-        return out
+        # version-memoized via the serving plane's DenseCache (the seed
+        # re-pulled and re-reshaped every tensor on every predict)
+        return self.serving.serve_dense()
 
     # ------------------------------------------------------------------
     # stability plane
@@ -350,6 +367,9 @@ class WeiPSCluster:
                 self._load_serve_rows(replicas, ids, g, serve)
         for sc in self.scatters:
             sc.seek(ckpt.queue_offsets)
+        # the rebuild happened outside the stream — every cached serve
+        # row and dense tensor is suspect, flush wholesale
+        self.serving.invalidate_all()
 
     def downgrade_check(self, now: float) -> Optional[int]:
         return self.downgrader.maybe_downgrade(now, self.validator)
@@ -406,6 +426,9 @@ class WeiPSCluster:
                     break
         sc = Scatter(shard, self.queue, self.plan, offsets=offsets)
         self.scatters.append(sc)
+        rs.attach_scatter(shard, sc)
+        shard.on_apply = self.serving.on_applied   # before catch-up: the
+        # replayed records invalidate any cached rows they rewrite
         self.scheduler.register(ComponentInfo(
             "slave", shard_id, len(rs.replicas) - 1))
         sc.poll()          # streaming catch-up: ckpt offsets -> queue head
@@ -418,6 +441,7 @@ class WeiPSCluster:
     def sync_metrics(self, now: float) -> dict:
         lag = max((now - sc.last_record_time for sc in self.scatters
                    if sc.shard.alive), default=0.0)
+        serving = self.serving.metrics()
         return {
             "sync_lag_seconds": lag,
             "pushed_bytes": sum(p.pushed_bytes for p in self.pushers),
@@ -425,4 +449,6 @@ class WeiPSCluster:
             "dedup_ratio": float(np.mean(
                 [g.stats.dedup_ratio for g in self.gatherers])),
             "replica_failovers": sum(rs.failovers for rs in self.replica_sets),
+            "replica_lag_skips": serving["replica_lag_skips"],
+            "serving": serving,
         }

@@ -45,6 +45,7 @@ from typing import Callable, Optional
 import numpy as np
 
 from repro.core.ps import MasterShard, SlaveShard
+from repro.core.routing import owner_segments
 
 logger = logging.getLogger(__name__)
 
@@ -195,18 +196,11 @@ def merge_shard_tables(shard_snaps: dict[int, dict]) -> dict[str, dict]:
 
 
 def iter_owner_segments(owner: np.ndarray):
-    """Yield (owner_id, index array) per destination with ONE argsort
-    over the whole set — the same segment routing the streaming pusher
-    uses for queue partitions, replacing the O(shards x snaps)
-    per-destination lambda filter of the seed recovery. Callers apply
-    the indices to whatever columns they route."""
-    order = np.argsort(owner, kind="stable")
-    sorted_owner = owner.take(order, mode="clip")
-    seg = np.flatnonzero(np.diff(sorted_owner)) + 1
-    starts = np.concatenate(([0], seg))
-    ends = np.concatenate((seg, [len(owner)]))
-    for s, e in zip(starts, ends):
-        yield int(sorted_owner[s]), order[s:e]
+    """Segment routing for recovery: one argsort over the whole set,
+    replacing the O(shards x snaps) per-destination lambda filter of the
+    seed recovery. Shared with the streaming pusher and the serving pull
+    path — the canonical implementation lives in ``core.routing``."""
+    return owner_segments(owner)
 
 
 def iter_owner_rows(rows: dict, owner: np.ndarray):
@@ -546,7 +540,13 @@ class ReplicaSet:
     """Hot backup (§4.2.2): multi-replica load balancing over slave shards
     holding the same shard_id. Stateless LB + stateful replicas;
     consistency via checkpoint-restore + streaming catch-up (preferred)
-    or full-sync from a peer."""
+    or full-sync from a peer.
+
+    The serving plane attaches each replica's ``Scatter`` so selection can
+    enforce a staleness bound: a replica whose consumer offsets trail the
+    master's push head by more than ``max_lag`` records is skipped while a
+    fresher healthy replica exists (availability still wins — when every
+    replica exceeds the bound, the freshest one serves)."""
 
     def __init__(self, replicas: list[SlaveShard],
                  bootstrap: Optional[Callable[[SlaveShard],
@@ -555,31 +555,61 @@ class ReplicaSet:
         self.replicas = replicas
         self.bootstrap = bootstrap
         self._rr = 0
+        self._scatters: dict[int, object] = {}    # id(shard) -> Scatter
         self.failovers = 0
+        self.lag_skips = 0
 
     def healthy(self) -> list[SlaveShard]:
         return [r for r in self.replicas if r.alive]
 
-    def pick(self) -> SlaveShard:
-        """Round-robin over healthy replicas; failover transparently."""
+    def attach_scatter(self, shard: SlaveShard, scatter) -> None:
+        """Register the consumer feeding ``shard`` — its offsets are the
+        staleness signal the lag bound compares against the queue head."""
+        self._scatters[id(shard)] = scatter
+
+    def replica_lag(self, shard: SlaveShard) -> int:
+        """Records produced to this shard's partitions not yet applied
+        (0 when no scatter is attached — nothing to lag behind)."""
+        sc = self._scatters.get(id(shard))
+        return sc.lag() if sc is not None else 0
+
+    def pick(self, max_lag: Optional[int] = None) -> SlaveShard:
+        """Round-robin over healthy replicas; failover transparently.
+        With ``max_lag`` set, replicas over the staleness bound are
+        skipped unless no healthy replica is within it."""
         h = self.healthy()
         if not h:
             raise RuntimeError("all replicas down")
+        if max_lag is not None and len(h) > 1:
+            lags = [self.replica_lag(r) for r in h]
+            fresh = [r for r, lag in zip(h, lags) if lag <= max_lag]
+            if fresh and len(fresh) < len(h):
+                self.lag_skips += len(h) - len(fresh)
+                h = fresh
+            elif not fresh:
+                # every replica is stale: availability over freshness —
+                # serve the one closest to the stream head
+                h = [h[int(np.argmin(lags))]]
         r = h[self._rr % len(h)]
         self._rr += 1
         return r
 
-    def lookup(self, group: str, ids: np.ndarray) -> np.ndarray:
-        """Serving read with failover retry — the request never fails while
-        any replica lives (zero-downtime claim of §4.2.2)."""
+    def read(self, fn: Callable[[SlaveShard], "np.ndarray"], *,
+             max_lag: Optional[int] = None):
+        """Serving read with failover retry — the request never fails
+        while any replica lives (zero-downtime claim of §4.2.2)."""
         for _ in range(len(self.replicas)):
-            r = self.pick()
+            r = self.pick(max_lag=max_lag)
             try:
-                return r.lookup(group, ids)
+                return fn(r)
             except AssertionError:
                 self.failovers += 1
                 continue
         raise RuntimeError("all replicas down")
+
+    def lookup(self, group: str, ids: np.ndarray,
+               max_lag: Optional[int] = None) -> np.ndarray:
+        return self.read(lambda r: r.lookup(group, ids), max_lag=max_lag)
 
     def add_replica(self, shard: SlaveShard, *,
                     bootstrap: Optional[Callable] = None) -> Optional[dict]:

@@ -8,6 +8,19 @@ support parameter deletion, §4.1c).
 Both paths are batched: admission counts live in a vectorized
 ``IdHashMap`` (id → running count) and expiry is one masked scan over the
 table's ``last_touch`` column — no per-id Python.
+
+The admission map itself is bounded: once it tracks more than
+``max_tracked`` ids, a decay-and-trim pass halves every count, drops
+ids that reach zero, and (if still over half the bound) evicts the
+lowest-count survivors down to ``max_tracked // 2``. One-off junk ids
+age out instead of accumulating forever; ids recurring often enough to
+accumulate counts between trims keep (half) their admission progress.
+Ids seen only once per trim interval cannot make progress under
+capacity pressure — an unavoidable property of ANY bounded admission
+map whose bound is smaller than the distinct-id traffic between trims
+(size the bound accordingly). The map size is bounded by
+``max_tracked`` plus one batch's distinct ids, never by the lifetime
+id space.
 """
 
 from __future__ import annotations
@@ -23,7 +36,9 @@ from repro.core.hashmap import IdHashMap
 class FeatureFilter:
     min_count: int = 1            # admissions below this never create rows
     ttl_steps: int = 10_000       # expiry horizon (in master steps)
+    max_tracked: int = 1 << 20    # admission-map bound (ids); decay past it
     counts: IdHashMap = field(default_factory=IdHashMap)
+    trims: int = 0
 
     def admit(self, ids: np.ndarray) -> np.ndarray:
         """Returns the unique ids admitted for row creation: those whose
@@ -34,7 +49,31 @@ class FeatureFilter:
         uniq, batch_counts = np.unique(ids, return_counts=True)
         total = self.counts.lookup(uniq, default=0) + batch_counts
         self.counts.put(uniq, total)
+        if len(self.counts) > self.max_tracked:
+            self._trim()
         return uniq[total >= self.min_count]
+
+    def _trim(self) -> None:
+        """Decay-and-trim: halve every admission count, drop ids that hit
+        zero, then (if still over half the bound) evict the lowest-count
+        survivors down to ``max_tracked // 2`` — the next trim can only
+        fire after another ``max_tracked // 2`` distinct ids, which is
+        the window recurring ids get to accumulate progress. Admission
+        state only gates row *creation*, so decaying an already-admitted
+        id never touches its existing PS row."""
+        ids, counts = self.counts.items()
+        counts = counts // 2
+        keep = counts > 0
+        ids, counts = ids[keep], counts[keep]
+        target = max(1, self.max_tracked // 2)
+        if len(ids) > target:
+            top = np.argpartition(counts, len(counts) - target)[-target:]
+            ids, counts = ids[top], counts[top]
+        fresh = IdHashMap(max(16, len(ids) * 4))
+        if len(ids):
+            fresh.put(ids, counts)
+        self.counts = fresh
+        self.trims += 1
 
     def expired(self, table, step: int) -> np.ndarray:
         """IDs whose last touch is older than ttl_steps."""

@@ -511,6 +511,12 @@ class SlaveShard:
         # ordered streams — a flush that touches only partition p must
         # not mark another partition's in-flight records stale.
         self._applied_seq: dict[tuple[str, int, int], int] = {}
+        # serving-plane invalidation hook: called with (group, ids, op)
+        # for every applied sparse batch, so predictor-side caches can
+        # drop rows the stream just rewrote (deletes included). Dense
+        # records need no hook — they carry a version counter the dense
+        # cache compares directly.
+        self.on_apply = None
         self.alive = True
         self.applied_records = 0
         self.skipped_records = 0
@@ -541,9 +547,13 @@ class SlaveShard:
                 self.dense_versions[name] = ver
         elif record.op == "delete":
             self.tables[record.group].evict(record.ids)
+            if self.on_apply is not None:
+                self.on_apply(record.group, record.ids, "delete")
         else:
             values = decode_record(record, backend=self.codec_backend)
             self.tables[record.group].scatter(record.ids, values)
+            if self.on_apply is not None:
+                self.on_apply(record.group, record.ids, "upsert")
         self._applied_seq[key] = max(last, record.seq)
         self.applied_records += 1
         return True
@@ -568,6 +578,8 @@ class SlaveShard:
             vals = val_l[0] if len(val_l) == 1 else \
                 np.concatenate(val_l, axis=0)
             self.tables[group].scatter(ids, vals)
+            if self.on_apply is not None:
+                self.on_apply(group, ids, "upsert")
 
         for rec in records:
             if rec.group.startswith("dense/") or rec.op == "delete":

@@ -69,6 +69,22 @@ class RoutingPlan:
         return {p: ids[part == p] for p in np.unique(part)}
 
 
+def owner_segments(owner: np.ndarray):
+    """Yield (owner_id, index array) per destination with ONE argsort over
+    the whole id set — the segment-routing primitive shared by the
+    streaming pusher (ids → queue partitions), the recovery router
+    (checkpoint rows → shards), and the serving pull path (request ids →
+    slave shards / master shards). Callers apply the yielded indices to
+    whatever columns they route."""
+    order = np.argsort(owner, kind="stable")
+    sorted_owner = owner.take(order, mode="clip")
+    seg = np.flatnonzero(np.diff(sorted_owner)) + 1
+    starts = np.concatenate(([0], seg))
+    ends = np.concatenate((seg, [len(owner)]))
+    for s, e in zip(starts, ends):
+        yield int(sorted_owner[s]), order[s:e]
+
+
 def reshard_plan(ids: np.ndarray, src_shards: int,
                  dst_shards: int) -> dict[tuple[int, int], np.ndarray]:
     """Checkpoint migration: {(src, dst): ids} mapping for loading a

@@ -87,3 +87,19 @@ class Scheduler:
 
     def routing(self, model: str):
         return self.registry.get(f"models/{model}/routing")
+
+    # -- serving scenarios ---------------------------------------------------
+    def register_scenario(self, model: str, scenario: str,
+                          meta: Optional[dict] = None) -> None:
+        """Publish a serving scenario (a predict configuration reading a
+        subset of the shared PS groups) into the registry — predictors
+        discover scenario membership the same way shards discover
+        routing, so the registry stays the single durable source."""
+        self.registry.put(f"models/{model}/scenarios/{scenario}", meta or {})
+
+    def scenarios(self, model: str) -> list[str]:
+        prefix = f"models/{model}/scenarios/"
+        return [k[len(prefix):] for k in self.registry.keys(prefix)]
+
+    def scenario_meta(self, model: str, scenario: str) -> Optional[dict]:
+        return self.registry.get(f"models/{model}/scenarios/{scenario}")

@@ -307,6 +307,12 @@ class Scatter:
     def offsets(self) -> dict[int, int]:
         return dict(self.consumer.offsets)
 
+    def lag(self) -> int:
+        """Records produced to this shard's partitions not yet applied —
+        the staleness signal the serving plane's lag-bounded replica
+        selection compares (``ReplicaSet.pick(max_lag=...)``)."""
+        return self.consumer.lag()
+
     def seek(self, offsets: dict[int, int]) -> None:
         """Rewind/forward this consumer to checkpointed queue offsets —
         the replay handle of the recovery and downgrade paths (records

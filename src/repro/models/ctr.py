@@ -33,6 +33,24 @@ def groups_for(cfg: CTRConfig) -> dict[str, int]:
     raise ValueError(cfg.model_type)
 
 
+def check_scenario_groups(scenario_groups: dict[str, int],
+                          store_groups: dict[str, int]) -> None:
+    """A scenario can serve off the shared parameter store only when every
+    sparse group it reads exists there with the same row dim (scenarios
+    select *subsets* of the store — an LR scenario reads ``w`` off an FM
+    store — they never widen it)."""
+    for g, dim in scenario_groups.items():
+        have = store_groups.get(g)
+        if have is None:
+            raise ValueError(
+                f"scenario group {g!r} is not in the parameter store "
+                f"(store groups: {sorted(store_groups)})")
+        if have != dim:
+            raise ValueError(
+                f"scenario group {g!r} wants dim {dim} but the store "
+                f"holds dim {have}")
+
+
 def dense_shapes(cfg: CTRConfig) -> dict[str, tuple[int, ...]]:
     if cfg.model_type != "dnn":
         return {}
@@ -96,6 +114,26 @@ def predict_fn(cfg: CTRConfig) -> Callable:
 
     @jax.jit
     def predict(rows, dense):
+        return jax.nn.sigmoid(f(rows, dense))
+
+    return predict
+
+
+def predict_block_fn(cfg: CTRConfig,
+                     offsets: dict[str, tuple[int, int]]) -> Callable:
+    """Predict from a combined-group row block ``(B*F, sum of dims)`` —
+    the serve cache's native layout (``ServeCache.offsets``): the
+    per-group split happens *inside* the jitted function as device
+    slices fused into the predict graph, so the serving hot path pays
+    ONE host→device transfer and zero per-group host row copies."""
+    f = _LOGITS[cfg.model_type]
+    fields = cfg.fields
+    offs = tuple((g, lo, hi) for g, (lo, hi) in offsets.items())
+
+    @jax.jit
+    def predict(block, dense):
+        r3 = block.reshape(-1, fields, block.shape[1])
+        rows = {g: r3[:, :, lo:hi] for g, lo, hi in offs}
         return jax.nn.sigmoid(f(rows, dense))
 
     return predict

@@ -1,0 +1,163 @@
+"""Version-aware serve caches (predictor side).
+
+``ServeCache`` short-circuits the shard pull for hot ids: one
+``IdHashMap``-backed arena (reusing ``SparseTable`` — the same vectorized
+probe/gather engine the shards run) stores, per row id, the columns of
+EVERY group the scenario reads side by side, so a cached request costs
+ONE probe + ONE gather regardless of group count.  Entries are
+invalidated by the scatter stream's applied-id batches (upserts AND
+streamed deletes — wired through ``SlaveShard.on_apply``), which keeps
+cached reads bit-equal to direct replica reads once the stream has been
+polled: a row the stream rewrote is dropped here before any predictor
+can read it stale.
+
+``DenseCache`` memoizes dense tensors by their sync version counter —
+the predict path re-reshapes a dense tensor only when a newer version
+actually streamed in, instead of re-pulling every tensor per request.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core.ps import SparseTable
+
+
+class ServeCache:
+    """Combined-group row cache keyed by id, invalidated by the stream."""
+
+    def __init__(self, groups: dict[str, int], max_rows: int = 1 << 20,
+                 backend: str = "numpy"):
+        self.groups = dict(groups)
+        self.offsets: dict[str, tuple[int, int]] = {}
+        lo = 0
+        for g, dim in self.groups.items():
+            self.offsets[g] = (lo, lo + dim)
+            lo += dim
+        self.width = lo
+        self.max_rows = max_rows
+        self.table = SparseTable(self.width, backend=backend,
+                                 init_capacity=1024)
+        self._tick = 0
+        self.hits = 0
+        self.misses = 0
+        self.invalidated = 0
+        self.trims = 0
+
+    def __len__(self) -> int:
+        return len(self.table)
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0
+
+    def lookup(self, ids: np.ndarray) -> tuple[Optional[np.ndarray],
+                                               np.ndarray]:
+        """(block (n, width), hit mask). Rows where the mask is False are
+        zeros — the caller pulls them from the shards and ``fill``s.
+        ``block`` is None when NOTHING hit (the fully-cold caller builds
+        its own block from the pull; allocating one here would be pure
+        waste on exactly the cold path)."""
+        self._tick += 1
+        sl = self.table.lookup(ids)
+        hit = sl >= 0
+        n_hit = int(hit.sum())
+        self.hits += n_hit
+        self.misses += len(ids) - n_hit
+        if n_hit == len(ids):
+            # hot path (steady-state serving): every id cached — straight
+            # gather, no zeros allocation, no masked scatter-copy
+            w, _ = self.table.read_rows(sl)
+            self.table.last_touch[sl] = self._tick      # LRU signal
+            return w, hit
+        if n_hit == 0:
+            return None, hit
+        block = np.zeros((len(ids), self.width), np.float32)
+        s = sl[hit]
+        w, _ = self.table.read_rows(s)
+        block[hit] = w
+        self.table.last_touch[s] = self._tick
+        return block, hit
+
+    def fill(self, ids: np.ndarray, block: np.ndarray) -> None:
+        """Install pulled rows (unique ids). Trims least-recently-touched
+        rows once the arena outgrows ``max_rows`` — the cache stays
+        bounded no matter how wide the request id distribution is."""
+        if not len(ids):
+            return
+        self.table.scatter(ids, block, step=self._tick)
+        if len(self.table) > self.max_rows:
+            self._trim()
+
+    def _trim(self) -> None:
+        ids = self.table.all_ids()
+        drop = len(ids) - self.max_rows // 2
+        if drop <= 0:
+            return
+        sl = self.table.lookup(ids)
+        oldest = np.argpartition(self.table.last_touch[sl], drop)[:drop]
+        self.table.evict(ids[oldest])
+        self.table.trim_evict_log(self.table.version)
+        self.trims += 1
+
+    def invalidate(self, ids: np.ndarray) -> int:
+        """Drop rows the stream just rewrote or deleted."""
+        if not len(self.table):
+            return 0        # nothing cached: keep the training-only
+            #                 sync_tick path free of probe work
+        n = self.table.evict(ids)
+        if n:
+            # a cache is never checkpointed: its table's eviction log
+            # (delta-checkpoint machinery) would otherwise grow with
+            # every stream invalidation, forever
+            self.table.trim_evict_log(self.table.version)
+        self.invalidated += n
+        return n
+
+    def clear(self) -> None:
+        """Full flush — hot switch / downgrade rebuilds serving state
+        wholesale, so every cached row is suspect."""
+        self.table = SparseTable(self.width, backend=self.table.backend,
+                                 init_capacity=1024)
+
+    def split(self, block: np.ndarray) -> dict[str, np.ndarray]:
+        """Carve a combined block back into per-group column views."""
+        return {g: block[:, lo:hi] for g, (lo, hi) in self.offsets.items()}
+
+    def stats(self) -> dict:
+        return {"rows": len(self), "hits": self.hits, "misses": self.misses,
+                "hit_rate": self.hit_rate, "invalidated": self.invalidated,
+                "trims": self.trims}
+
+
+class DenseCache:
+    """Dense tensors memoized by sync version — one reshape per version,
+    not one pull per predict (the seed re-read every tensor per call)."""
+
+    def __init__(self):
+        self._cached: dict[str, tuple[int, np.ndarray]] = {}
+        self.hits = 0
+        self.refreshes = 0
+
+    def get(self, name: str, shape: tuple[int, ...], version: int,
+            fetch: Callable[[], Optional[np.ndarray]]) -> np.ndarray:
+        cur = self._cached.get(name)
+        # >= : with round-robin replica picks, a lagging replica may
+        # report an OLDER version than what is cached — serving the
+        # cached newer tensor is both fresher and stable (versions only
+        # move backwards on hot switch, which clear()s this cache)
+        if cur is not None and cur[0] >= version:
+            self.hits += 1
+            return cur[1]
+        v = fetch()
+        arr = (np.asarray(v, np.float32).reshape(shape) if v is not None
+               else np.zeros(shape, np.float32))
+        self._cached[name] = (version, arr)
+        self.refreshes += 1
+        return arr
+
+    def clear(self) -> None:
+        self._cached = {}

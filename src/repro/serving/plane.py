@@ -1,0 +1,236 @@
+"""The serving plane as a subsystem (the tentpole of the symmetric-fusion
+claim): vectorized pull, lag-bounded replica selection, version-aware
+serve cache, micro-batching predict scheduler, multi-scenario registry.
+
+Request path (hot):
+
+    predict(ids, scenario)            — immediate single-request path
+    submit(ids) … flush()             — coalesced concurrent load
+      └ PredictScheduler: chunk the (coalesced) load into buckets
+          └ pull: ONE cache probe over the request's flat ids
+              ├ hits  — gathered straight from the cache arena
+              └ misses — unique → argsort ownership segments
+                         (RowRouter, shared with the training plane)
+                         → per-segment replica read (ReplicaSet.read:
+                           lag-bounded pick + failover) → cache fill
+          └ pad rows to the bucket, jitted predict_fn, slice, split
+
+Cache consistency: every replica's ``SlaveShard.on_apply`` publishes the
+(group, ids, op) batches its scatter applied; ``on_applied`` drops those
+ids from every scenario cache whose group subset contains the group —
+including streamed deletes. Hot switch / downgrade rebuilds serving
+state outside the stream, so the cluster flushes the caches wholesale
+(``invalidate_all``). Dense tensors are memoized by sync version
+(``DenseCache``) instead of re-pulled per request.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.weips_ctr import CTRConfig
+from repro.core.routing import RoutingPlan
+from repro.models import ctr as ctr_model
+from repro.serving.cache import ServeCache
+from repro.serving.registry import Scenario, ScenarioRegistry
+from repro.serving.router import RowRouter
+from repro.serving.scheduler import DEFAULT_BUCKETS, PredictScheduler
+
+
+class ServingPlane:
+    """Serving-side subsystem over a cluster's slave replica sets."""
+
+    def __init__(self, plan: RoutingPlan, replica_sets: list,
+                 store_groups: dict[str, int], *,
+                 max_replica_lag: Optional[int] = None,
+                 cache_rows: int = 1 << 20,
+                 buckets: tuple[int, ...] = DEFAULT_BUCKETS):
+        self.plan = plan
+        self.replica_sets = replica_sets
+        self.store_groups = dict(store_groups)
+        self.max_replica_lag = max_replica_lag
+        self.cache_rows = cache_rows
+        self.buckets = tuple(buckets)
+        self.router = RowRouter(plan)
+        self.registry = ScenarioRegistry()
+        self.shard_pulled_rows = 0          # rows read from replicas
+        self.predict_seconds = 0.0
+
+    # ------------------------------------------------------------------
+    # scenarios
+    # ------------------------------------------------------------------
+    def add_scenario(self, cfg: CTRConfig, *,
+                     name: Optional[str] = None) -> Scenario:
+        """Register a serving scenario: validates its group subset against
+        the shared store, builds its predict fn, cache namespace, and
+        micro-batching scheduler."""
+        groups = ctr_model.groups_for(cfg)
+        ctr_model.check_scenario_groups(groups, self.store_groups)
+        cache = ServeCache(groups, max_rows=self.cache_rows)
+        scn = Scenario(
+            name=name or cfg.name, cfg=cfg, groups=groups,
+            dense_shapes=ctr_model.dense_shapes(cfg),
+            predict_raw=ctr_model.predict_fn(cfg),
+            predict_block=ctr_model.predict_block_fn(cfg, cache.offsets),
+            cache=cache)
+        scn.scheduler = PredictScheduler(
+            lambda ids, bucket, s=scn: self._run_bucket(s, ids, bucket),
+            buckets=self.buckets)
+        return self.registry.add(scn)
+
+    def scenario(self, name: Optional[str] = None) -> Scenario:
+        return self.registry.get(name)
+
+    # ------------------------------------------------------------------
+    # pull path
+    # ------------------------------------------------------------------
+    def _fetch_block(self, sid: int, ids: np.ndarray,
+                     scn: Scenario) -> np.ndarray:
+        """Read one owner segment's combined-group block from shard
+        ``sid``'s replica set — ONE replica pick (lag-bounded, failover)
+        covers every group of the request, where the seed picked a
+        replica per (group, shard) lookup."""
+
+        def read(rep):
+            out = np.empty((len(ids), scn.cache.width), np.float32)
+            for g, (lo, hi) in scn.cache.offsets.items():
+                out[:, lo:hi] = rep.lookup(g, ids)
+            return out
+
+        self.shard_pulled_rows += len(ids)
+        return self.replica_sets[sid].read(read,
+                                           max_lag=self.max_replica_lag)
+
+    def pull_request(self, ids: np.ndarray,
+                     scenario: Optional[str] = None) -> np.ndarray:
+        """Combined-group rows for a request's flat ids, in request order
+        (duplicates included — no np.unique on the cache-hit path). Cache
+        misses are uniqued, pulled through the shared router in owner
+        segments, and installed in the cache."""
+        scn = self.registry.get(scenario)
+        flat = np.asarray(ids, dtype=np.int64).reshape(-1)
+        block, hit = scn.cache.lookup(flat)
+        if block is None or not hit.all():
+            miss_flat = flat if block is None else flat[~hit]
+            uniq, inverse = np.unique(miss_flat, return_inverse=True)
+            pulled = self.router.pull_block(
+                uniq, scn.cache.width, self.plan.slave_shard(uniq),
+                lambda sid, seg: self._fetch_block(sid, seg, scn))
+            scn.cache.fill(uniq, pulled)
+            expanded = pulled.take(inverse, axis=0, mode="clip")
+            if block is None:
+                block = expanded               # fully cold: no masked copy
+            else:
+                block[~hit] = expanded
+        return block
+
+    def serve_rows(self, ids: np.ndarray,
+                   scenario: Optional[str] = None) -> dict[str, np.ndarray]:
+        """Predictor pull path: ``{group: (B, F, dim)}`` serve rows."""
+        scn = self.registry.get(scenario)
+        b, f = np.asarray(ids).shape
+        block = self.pull_request(ids, scenario)
+        return {g: block[:, lo:hi].reshape(b, f, hi - lo)
+                for g, (lo, hi) in scn.cache.offsets.items()}
+
+    def serve_dense(self,
+                    scenario: Optional[str] = None) -> dict[str, np.ndarray]:
+        """Dense bank for predict — memoized by sync version, re-read from
+        a replica only when a newer dense record actually streamed in."""
+        scn = self.registry.get(scenario)
+        if not scn.dense_shapes:
+            return {}
+
+        def read(rep):
+            return {
+                name: scn.dense_cache.get(
+                    name, shape, rep.dense_versions.get(name, -1),
+                    lambda n=name: rep.dense.get(n))
+                for name, shape in scn.dense_shapes.items()}
+
+        return self.replica_sets[0].read(read, max_lag=self.max_replica_lag)
+
+    # ------------------------------------------------------------------
+    # predict path
+    # ------------------------------------------------------------------
+    def _run_bucket(self, scn: Scenario, ids: np.ndarray,
+                    bucket: int) -> np.ndarray:
+        """Pull the combined-group block for the real examples, pad it
+        (not the ids — the cache never sees padding) up to the bucket,
+        run the jitted block predict at the bucket shape, slice the
+        padding off. The per-group split happens on device inside
+        ``predict_block`` — the host never copies per-group row
+        tensors on this path."""
+        b, f = ids.shape
+        block = self.pull_request(ids, scn.name)       # (b*f, width)
+        dense = self.serve_dense(scn.name)
+        if b < bucket:
+            block = np.concatenate(
+                [block, np.zeros(((bucket - b) * f, block.shape[1]),
+                                 block.dtype)])
+        p = scn.predict_block(
+            jnp.asarray(block),
+            {k: jnp.asarray(v) for k, v in dense.items()})
+        return np.asarray(p)[:b]
+
+    def predict(self, ids: np.ndarray,
+                scenario: Optional[str] = None) -> np.ndarray:
+        """Immediate single-request path. Requests admitted via
+        ``submit`` are left pending for the next ``flush`` — their
+        tickets stay valid."""
+        scn = self.registry.get(scenario)
+        t0 = time.perf_counter()
+        out = scn.scheduler.run_one(ids)
+        self.predict_seconds += time.perf_counter() - t0
+        scn.requests += 1
+        scn.examples += len(ids)
+        return out
+
+    def submit(self, ids: np.ndarray,
+               scenario: Optional[str] = None) -> int:
+        """Admit a request without running it — concurrent requests queue
+        here and execute coalesced on the next ``flush``."""
+        return self.registry.get(scenario).scheduler.submit(ids)
+
+    def flush(self, scenario: Optional[str] = None) -> list[np.ndarray]:
+        scn = self.registry.get(scenario)
+        t0 = time.perf_counter()
+        out = scn.scheduler.flush()
+        self.predict_seconds += time.perf_counter() - t0
+        scn.requests += len(out)
+        scn.examples += sum(len(p) for p in out)
+        return out
+
+    # ------------------------------------------------------------------
+    # invalidation (stream hooks)
+    # ------------------------------------------------------------------
+    def on_applied(self, group: str, ids: np.ndarray, op: str) -> None:
+        """``SlaveShard.on_apply`` hook: the stream rewrote (or deleted)
+        these rows — drop them from every cache namespace that reads the
+        group, so the next read refills from a replica."""
+        for scn in self.registry:
+            if group in scn.groups:
+                scn.cache.invalidate(ids)
+
+    def invalidate_all(self) -> None:
+        """Wholesale flush: hot switch / downgrade / recovery rebuilt the
+        serving tables outside the stream."""
+        for scn in self.registry:
+            scn.cache.clear()
+            scn.dense_cache.clear()
+
+    # ------------------------------------------------------------------
+    # metrics
+    # ------------------------------------------------------------------
+    def metrics(self) -> dict:
+        return {
+            "scenarios": {s.name: s.metrics() for s in self.registry},
+            "shard_pulled_rows": self.shard_pulled_rows,
+            "predict_seconds": self.predict_seconds,
+            "replica_lag_skips": sum(rs.lag_skips
+                                     for rs in self.replica_sets),
+        }

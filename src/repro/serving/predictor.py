@@ -76,6 +76,10 @@ class ServeDriver:
         return nxt[:, None]
 
     def generate(self, prompt_token: jax.Array, steps: int) -> np.ndarray:
+        # fresh accumulator per call: a second generate must return only
+        # its own tokens, not stack the previous call's on top (the cache
+        # and position carry over — hot_swap mid-stream still works)
+        self.generated = []
         tok = prompt_token
         for _ in range(steps):
             tok = self.step(tok)

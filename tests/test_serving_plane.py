@@ -1,0 +1,432 @@
+"""Serving-plane subsystem tests (src/repro/serving/): vectorized pull
+bit-equality against the seed per-shard loop, lag-bounded replica
+selection with failover, serve-cache invalidation by the scatter stream
+(upserts and deletes), dense version memoization, micro-batching bucket
+padding, multi-scenario isolation, and the bounded feature-admission map.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.weips_ctr import DNN_ADAM, FM_FTRL, LR_FTRL
+from repro.core import ClusterConfig, WeiPSCluster
+from repro.core.feature_filter import FeatureFilter
+from repro.data import ClickStream
+
+FM = dataclasses.replace(FM_FTRL, ftrl_l1=0.01, ftrl_alpha=0.2)
+LR = dataclasses.replace(LR_FTRL, ftrl_l1=0.01, ftrl_alpha=0.2)
+DNN_SMALL = dataclasses.replace(DNN_ADAM, fields=4, embed_dim=4,
+                                dnn_hidden=(16,))
+
+
+def _train(cl, cfg, steps=15, batch=64, seed=0, space=1 << 12):
+    stream = ClickStream(feature_space=space, fields=cfg.fields, seed=seed)
+    for i in range(steps):
+        ids, y = stream.batch(batch)
+        cl.train_on_batch(ids, y, now=float(i))
+        cl.sync_tick(float(i))
+    return stream
+
+
+def _seed_serve_rows(cl, ids):
+    """The seed's per-group × per-shard masked serving loop, verbatim."""
+    b, f = ids.shape
+    flat = ids.reshape(-1)
+    uniq, inverse = np.unique(flat, return_inverse=True)
+    owner = cl.plan.slave_shard(uniq)
+    rows = {}
+    for group, dim in cl.groups.items():
+        vals = np.zeros((len(uniq), dim), np.float32)
+        for sid in range(cl.ccfg.num_slave):
+            mask = owner == sid
+            if mask.any():
+                vals[mask] = cl.replica_sets[sid].lookup(group, uniq[mask])
+        rows[group] = vals[inverse].reshape(b, f, dim)
+    return rows
+
+
+def _seed_pull_rows(cl, ids):
+    """The seed's training-plane masked pull loop, verbatim."""
+    b, f = ids.shape
+    uniq, inverse = np.unique(ids.reshape(-1), return_inverse=True)
+    by_master = cl.plan.split_by_master(uniq)
+    rows = {}
+    for group, dim in cl.groups.items():
+        vals = np.zeros((len(uniq), dim), np.float32)
+        for mid, mids in by_master.items():
+            pos = np.searchsorted(uniq, mids)
+            vals[pos] = cl.masters[mid].pull(group, mids)
+        rows[group] = vals[inverse].reshape(b, f, dim)
+    return rows
+
+
+def _direct_replica_rows(cl, ids, replica_idx=0):
+    """Ground truth: read straight off one replica per shard, no cache."""
+    flat = ids.reshape(-1)
+    owner = cl.plan.slave_shard(flat)
+    out = {}
+    for g, dim in cl.groups.items():
+        vals = np.zeros((len(flat), dim), np.float32)
+        for sid in range(cl.ccfg.num_slave):
+            mask = owner == sid
+            if mask.any():
+                vals[mask] = cl.replica_sets[sid].replicas[
+                    replica_idx].lookup(g, flat[mask])
+        out[g] = vals.reshape(ids.shape + (dim,))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# vectorized pull == seed loop
+# ---------------------------------------------------------------------------
+def test_vectorized_serve_pull_matches_seed_loop():
+    cl = WeiPSCluster(FM, ClusterConfig(
+        num_master=3, num_slave=2, num_replicas=2, num_partitions=4))
+    stream = _train(cl, FM)
+    ids, _ = stream.batch(64)
+    seed = _seed_serve_rows(cl, ids)
+    got = cl.serve_rows(ids)
+    assert set(got) == set(seed)
+    for g in seed:
+        np.testing.assert_array_equal(got[g], seed[g])
+
+
+def test_training_pull_matches_seed_loop():
+    """The training plane runs the same shared router — bit-equal to the
+    seed's per-master masked loop."""
+    cl = WeiPSCluster(FM, ClusterConfig(
+        num_master=3, num_slave=2, num_replicas=1, num_partitions=4))
+    stream = _train(cl, FM, steps=8)
+    ids, _ = stream.batch(64)
+    seed = _seed_pull_rows(cl, ids)
+    got, uniq, inverse = cl._pull_rows(ids)
+    for g in seed:
+        np.testing.assert_array_equal(got[g], seed[g])
+
+
+# ---------------------------------------------------------------------------
+# serve cache: hits skip shard pulls, invalidation keeps reads bit-equal
+# ---------------------------------------------------------------------------
+def test_cache_hits_skip_shard_pulls():
+    cl = WeiPSCluster(FM, ClusterConfig(
+        num_master=2, num_slave=2, num_replicas=1, num_partitions=4))
+    stream = _train(cl, FM)
+    ids, _ = stream.batch(64)
+    p1 = cl.predict(ids)
+    pulled = cl.serving.shard_pulled_rows
+    p2 = cl.predict(ids)                      # same ids: all cache hits
+    assert cl.serving.shard_pulled_rows == pulled
+    cache = cl.serving.scenario().cache
+    assert cache.hits > 0 and cache.hit_rate > 0
+    np.testing.assert_array_equal(p1, p2)
+
+
+def test_cache_reads_bit_equal_after_every_sync_tick():
+    """The acceptance criterion: after EVERY sync_tick, cached serve reads
+    equal direct replica reads bit-for-bit — streamed upserts invalidate
+    the rows they rewrote before any predictor can read them stale."""
+    cl = WeiPSCluster(FM, ClusterConfig(
+        num_master=2, num_slave=2, num_replicas=2, num_partitions=4))
+    stream = ClickStream(feature_space=1 << 10, fields=FM.fields, seed=3)
+    eval_ids, _ = stream.batch(48)
+    for i in range(10):
+        ids, y = stream.batch(48)
+        cl.train_on_batch(ids, y, now=float(i))
+        cl.sync_tick(float(i))
+        got = cl.serve_rows(eval_ids)         # fills/refreshes the cache
+        direct = _direct_replica_rows(cl, eval_ids)
+        for g in direct:
+            np.testing.assert_array_equal(got[g], direct[g])
+    assert cl.serving.scenario().cache.invalidated > 0
+
+
+def test_cache_invalidation_on_streamed_delete():
+    cl = WeiPSCluster(LR, ClusterConfig(
+        num_master=2, num_slave=2, num_replicas=1, num_partitions=4,
+        feature_ttl_steps=2))
+    stream = ClickStream(feature_space=1 << 10, fields=LR.fields, seed=1)
+    ids0, y0 = stream.batch(32)
+    cl.train_on_batch(ids0, y0, now=0.0)
+    cl.sync_tick(0.0)
+    rows0 = cl.serve_rows(ids0)               # cache the soon-stale rows
+    assert np.abs(rows0["w"]).max() > 0
+    for i in range(1, 8):
+        ids, y = stream.batch(32)
+        cl.train_on_batch(ids, y, now=float(i))
+    n_expired = cl.expire_features(now=8.0)
+    assert n_expired > 0
+    cl.sync_tick(8.0)                         # streams the deletes
+    cache = cl.serving.scenario().cache
+    assert cache.invalidated > 0
+    got = cl.serve_rows(ids0)
+    direct = _direct_replica_rows(cl, ids0)
+    np.testing.assert_array_equal(got["w"], direct["w"])
+
+
+# ---------------------------------------------------------------------------
+# dense memoization (satellite: _serve_dense re-pull fix)
+# ---------------------------------------------------------------------------
+def test_dense_cache_memoizes_by_version():
+    cl = WeiPSCluster(DNN_SMALL, ClusterConfig(
+        num_master=2, num_slave=1, num_replicas=1, num_partitions=2))
+    stream = _train(cl, DNN_SMALL, steps=3, batch=32, space=1 << 10)
+    ids, _ = stream.batch(16)
+    dc = cl.serving.scenario().dense_cache
+    cl.predict(ids)
+    r0 = dc.refreshes
+    assert r0 > 0
+    for _ in range(3):                        # no new dense versions
+        cl.predict(ids)
+    assert dc.refreshes == r0, "dense tensors re-pulled without a new version"
+    # a new dense push + sync moves the version → exactly one refresh per
+    # tensor that changed
+    ids2, y2 = stream.batch(32)
+    cl.train_on_batch(ids2, y2, now=10.0)
+    cl.sync_tick(10.0)
+    cl.predict(ids)
+    assert dc.refreshes > r0
+    # and the memoized dense bank matches the replica's decoded tensors
+    dense = cl._serve_dense()
+    rep = cl.replica_sets[0].replicas[0]
+    import repro.models.ctr as ctr_model
+    for name, shape in ctr_model.dense_shapes(DNN_SMALL).items():
+        np.testing.assert_array_equal(
+            dense[name], rep.dense[name].reshape(shape))
+
+
+# ---------------------------------------------------------------------------
+# lag-bounded replica selection + failover
+# ---------------------------------------------------------------------------
+def test_lag_bounded_replica_skip_and_failover():
+    cl = WeiPSCluster(FM, ClusterConfig(
+        num_master=2, num_slave=2, num_replicas=2, num_partitions=4,
+        serve_max_lag=0))
+    stream = _train(cl, FM, steps=10)
+    ids, y = stream.batch(64)
+    cl.train_on_batch(ids, y, now=20.0)
+    cl.sync_tick(20.0, scatter=False)         # push only: all replicas lag
+    fresh = []
+    for rs in cl.replica_sets:                # catch up ONE replica per set
+        r0 = rs.replicas[0]
+        for sc in cl.scatters:
+            if sc.shard is r0:
+                sc.poll()
+        fresh.append(r0)
+        assert rs.replica_lag(rs.replicas[1]) > 0
+    skips0 = cl.serving.metrics()["replica_lag_skips"]
+    got = cl.serve_rows(ids)
+    assert cl.serving.metrics()["replica_lag_skips"] > skips0
+    # the values served are the FRESH replicas' values
+    flat = ids.reshape(-1)
+    owner = cl.plan.slave_shard(flat)
+    for g, dim in cl.groups.items():
+        direct = np.zeros((len(flat), dim), np.float32)
+        for sid in range(2):
+            mask = owner == sid
+            direct[mask] = fresh[sid].lookup(g, flat[mask])
+        np.testing.assert_array_equal(got[g].reshape(-1, dim), direct)
+    # kill the fresh replicas: serving falls back to the stale ones
+    # (availability over freshness) without raising
+    for rs in cl.replica_sets:
+        rs.replicas[0].kill()
+    cl.serving.invalidate_all()               # cached fresh values aside
+    cl.predict(ids)
+    assert sum(rs.failovers for rs in cl.replica_sets) >= 0
+
+
+# ---------------------------------------------------------------------------
+# micro-batching scheduler
+# ---------------------------------------------------------------------------
+def test_scheduler_bucket_padding_correctness():
+    cl = WeiPSCluster(FM, ClusterConfig(
+        num_master=2, num_slave=1, num_replicas=1, num_partitions=2,
+        serve_buckets=(8, 32)))
+    stream = _train(cl, FM, steps=8)
+    ids, _ = stream.batch(50)                 # 50 → one 32-chunk + pad(18→32)
+    p = cl.predict(ids)
+    assert p.shape == (50,)
+    # reference: raw predict fn on the exact unpadded rows
+    rows = cl.serve_rows(ids)
+    dense = cl._serve_dense()
+    ref = np.asarray(cl.serving.scenario().predict_raw(
+        {g: jnp.asarray(v) for g, v in rows.items()},
+        {k: jnp.asarray(v) for k, v in dense.items()}))
+    np.testing.assert_allclose(p, ref, rtol=1e-6, atol=1e-7)
+    stats = cl.serving.scenario().scheduler.stats
+    assert stats.batches == 2 and stats.padded_examples == 14
+    assert set(stats.bucket_counts) <= {8, 32}
+
+
+def test_scheduler_coalesces_concurrent_requests():
+    cl = WeiPSCluster(FM, ClusterConfig(
+        num_master=2, num_slave=1, num_replicas=1, num_partitions=2,
+        serve_buckets=(64,)))
+    stream = _train(cl, FM, steps=8)
+    reqs = [stream.batch(n)[0] for n in (5, 17, 30)]
+    singles = [cl.predict(r) for r in reqs]
+    tickets = [cl.serving.submit(r) for r in reqs]
+    batches0 = cl.serving.scenario().scheduler.stats.batches
+    outs = cl.serving.flush()
+    # 52 coalesced examples fit ONE 64-bucket execution
+    assert cl.serving.scenario().scheduler.stats.batches == batches0 + 1
+    for t, r, s in zip(tickets, reqs, singles):
+        assert outs[t].shape == (len(r),)
+        np.testing.assert_allclose(outs[t], s, rtol=1e-6, atol=1e-7)
+
+
+def test_predict_does_not_orphan_submitted_tickets():
+    """predict() must not consume (and discard) requests admitted via
+    submit() — their tickets stay valid for the next flush()."""
+    cl = WeiPSCluster(FM, ClusterConfig(
+        num_master=2, num_slave=1, num_replicas=1, num_partitions=2))
+    stream = _train(cl, FM, steps=6)
+    ids1, _ = stream.batch(12)
+    ids2, _ = stream.batch(20)
+    t = cl.serving.submit(ids1)
+    p2 = cl.predict(ids2)                     # independent immediate path
+    outs = cl.serving.flush()
+    assert len(outs) == 1 and outs[t].shape == (12,)
+    np.testing.assert_allclose(outs[t], cl.predict(ids1),
+                               rtol=1e-6, atol=1e-7)
+    assert p2.shape == (20,)
+
+
+def test_cache_evict_log_stays_bounded():
+    """Stream invalidations must not grow the cache table's eviction log
+    (delta-checkpoint machinery a cache never uses)."""
+    cl = WeiPSCluster(FM, ClusterConfig(
+        num_master=2, num_slave=1, num_replicas=1, num_partitions=2))
+    stream = ClickStream(feature_space=1 << 8, fields=FM.fields, seed=4)
+    eval_ids, _ = stream.batch(32)
+    for i in range(12):
+        ids, y = stream.batch(32)
+        cl.train_on_batch(ids, y, now=float(i))
+        cl.serve_rows(eval_ids)               # cache rows, then the next
+        cl.sync_tick(float(i))                # tick invalidates overlaps
+    cache = cl.serving.scenario().cache
+    assert cache.invalidated > 0
+    assert len(cache.table._evict_log) == 0
+
+
+def test_dense_cache_stable_across_round_robin_replicas():
+    """With 2 replicas round-robin-picked, a lagging replica must neither
+    force a refresh per predict nor regress served dense weights."""
+    cl = WeiPSCluster(DNN_SMALL, ClusterConfig(
+        num_master=2, num_slave=1, num_replicas=2, num_partitions=2))
+    stream = _train(cl, DNN_SMALL, steps=3, batch=32, space=1 << 10)
+    ids, _ = stream.batch(16)
+    # push a dense update, let only replica 0 apply it
+    ids2, y2 = stream.batch(32)
+    cl.train_on_batch(ids2, y2, now=10.0)
+    cl.sync_tick(10.0, scatter=False)
+    r0 = cl.replica_sets[0].replicas[0]
+    for sc in cl.scatters:
+        if sc.shard is r0:
+            sc.poll()
+    cl.predict(ids)
+    cl.predict(ids)                           # both replicas seen once
+    p_ref = cl.predict(ids)
+    dc = cl.serving.scenario().dense_cache
+    r = dc.refreshes
+    for _ in range(4):                        # alternating replica picks
+        np.testing.assert_array_equal(cl.predict(ids), p_ref)
+    assert dc.refreshes == r, "round-robin picks defeated the memoization"
+
+
+# ---------------------------------------------------------------------------
+# multi-scenario registry
+# ---------------------------------------------------------------------------
+def test_multi_scenario_isolation():
+    cl = WeiPSCluster(FM, ClusterConfig(
+        num_master=2, num_slave=2, num_replicas=1, num_partitions=4))
+    lr = dataclasses.replace(LR, name="lr-head")
+    cl.add_scenario(lr)
+    assert set(cl.serving.registry.names()) == {"lr-head", FM.name}
+    assert set(cl.scheduler.scenarios(FM.name)) == {"lr-head", FM.name}
+    stream = _train(cl, FM)
+    ids, _ = stream.batch(64)
+    # the LR scenario reads ONLY the shared "w" group off the FM store
+    rows = cl.serve_rows(ids, scenario="lr-head")
+    assert set(rows) == {"w"}
+    p_lr = cl.predict(ids, scenario="lr-head")
+    ref = 1.0 / (1.0 + np.exp(-rows["w"][..., 0].sum(axis=1,
+                                                     dtype=np.float64)))
+    np.testing.assert_allclose(p_lr, ref, rtol=1e-5, atol=1e-6)
+    # cache namespaces are per scenario: widths and counters independent
+    fm_cache = cl.serving.scenario(FM.name).cache
+    lr_cache = cl.serving.scenario("lr-head").cache
+    assert fm_cache.width == 1 + FM.embed_dim and lr_cache.width == 1
+    assert fm_cache.stats() != lr_cache.stats() or len(fm_cache) == 0
+    cl.predict(ids)                           # FM traffic
+    assert cl.serving.scenario(FM.name).examples > 0
+    assert cl.serving.scenario("lr-head").examples == 64
+
+
+def test_scenario_group_validation():
+    cl = WeiPSCluster(FM, ClusterConfig(
+        num_master=2, num_slave=1, num_replicas=1, num_partitions=2))
+    with pytest.raises(ValueError, match="not in the parameter store"):
+        cl.add_scenario(DNN_SMALL)            # "emb" is not an FM group
+    fm_wide = dataclasses.replace(FM, name="fm-wide", embed_dim=32)
+    with pytest.raises(ValueError, match="dim"):
+        cl.add_scenario(fm_wide)              # "v" dim mismatch
+
+
+# ---------------------------------------------------------------------------
+# feature-filter admission map stays bounded (satellite)
+# ---------------------------------------------------------------------------
+def test_feature_filter_counts_bounded():
+    f = FeatureFilter(min_count=2, max_tracked=1000)
+    rng = np.random.default_rng(0)
+    for i in range(20):                       # 20k distinct junk ids
+        f.admit(rng.integers(0, 1 << 40, size=1000))
+    assert f.trims > 0
+    assert len(f.counts) <= 2000              # bounded by traffic/trim, not
+    #                                           the lifetime id space
+    # a genuinely recurring id still gets admitted
+    hot = np.full(1, 12345, np.int64)
+    admitted = False
+    for _ in range(4):
+        admitted = admitted or 12345 in f.admit(np.repeat(hot, 2))
+    assert admitted
+
+
+def test_feature_filter_cross_batch_recurrence_survives_trims():
+    """Ids recurring ONCE per batch (never twice within one) must still
+    reach admission while junk churns through the bounded map — trims
+    may not zero out cross-batch progress when the bound is sized above
+    the per-trim-interval distinct traffic."""
+    f = FeatureFilter(min_count=5, max_tracked=1000)
+    rng = np.random.default_rng(1)
+    hot = np.arange(50, dtype=np.int64)       # recurs once per batch
+    admitted: set = set()
+    for i in range(15):
+        junk = rng.integers(1 << 20, 1 << 40, size=80)
+        admitted |= set(f.admit(np.concatenate([hot, junk])).tolist())
+    assert set(hot.tolist()) <= admitted
+    assert len(f.counts) <= 2000
+
+
+# ---------------------------------------------------------------------------
+# LM serve driver: generate must not stack previous calls (satellite)
+# ---------------------------------------------------------------------------
+def test_serve_driver_generate_resets_between_calls():
+    from repro.configs import get_config, reduced
+    from repro.serving.predictor import ServeDriver
+    from repro.models import init_params
+    cfg = reduced(get_config("qwen2-1.5b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    drv = ServeDriver(cfg=cfg, params=params, batch=2, max_len=16)
+    tok = jnp.zeros((2, 1), jnp.int32)
+    out1 = drv.generate(tok, steps=3)
+    assert out1.shape == (2, 3)
+    out2 = drv.generate(tok, steps=4)
+    assert out2.shape == (2, 4), \
+        "second generate stacked the first call's tokens"
+    # hot swap between calls still works on the same cache
+    drv.hot_swap(params)
+    assert drv.generate(tok, steps=2).shape == (2, 2)
