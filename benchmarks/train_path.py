@@ -1,0 +1,293 @@
+"""Training-plane benchmark: the online ingest→update path (the paper's
+§1.1–1.2 pipeline), measured against the seed's per-event dict+heap
+joiner (kept here verbatim as ``SeedSampleJoiner``) and per-batch Python
+event loop.
+
+Legs:
+  * joiner_stage  — the acceptance leg: events/s through the sample
+    joiner at 65k-event batches (exposures + delayed feedback + drain),
+    seed per-event loop vs the vectorized columnar joiner, plus a
+    sample-equivalence gate (same ids/labels/order on identical input).
+  * dedup_sweep   — per-batch id dedup/coalesce across Zipf skews: the
+    paper's ≥90 % update-repetition claim measured as the ratio of raw
+    to unique ids per train batch, with the train-step latency it saves.
+  * bucket_ladder — ingest→update latency through the TrainPipeline for
+    mixed drain sizes under different pow2 bucket ladders: compiled
+    shape count, padding fraction, ms per flush.
+  * window_sweep  — the timeliness vs model-effect trade-off: join
+    window length vs captured-positive fraction, join-delay p50/p99 and
+    late feedback, including the emit-on-feedback fast path.
+
+Timing uses best-of-``--reps`` (the ``timeit`` convention).
+
+Run:  PYTHONPATH=src python benchmarks/train_path.py [--smoke]
+Emits BENCH_train_path.json (or --out PATH).
+"""
+
+from __future__ import annotations
+
+import argparse
+import heapq
+import json
+import time
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Baseline: the seed per-event joiner, verbatim (data/joiner.py before the
+# vectorized rewrite) — including its event-object interface: tuple
+# feature ids in, per-sample ndarray conversion out.
+# ---------------------------------------------------------------------------
+class SeedSampleJoiner:
+    """Event-time window join over exposure + feedback streams."""
+
+    def __init__(self, window: float = 30.0):
+        self.window = window
+        self._pending: dict[int, tuple] = {}       # vid -> (t, feature tuple)
+        self._labels: dict[int, float] = {}
+        self._expiry: list[tuple[float, int]] = []    # heap (deadline, view)
+        self.late_feedback = 0
+        self.emitted = 0
+
+    def offer_exposure(self, t: float, view_id: int,
+                       feature_ids: tuple) -> None:
+        self._pending[view_id] = (t, feature_ids)
+        heapq.heappush(self._expiry, (t + self.window, view_id))
+
+    def offer_feedback(self, t: float, view_id: int,
+                       label: float = 1.0) -> None:
+        if view_id in self._pending:
+            self._labels[view_id] = label
+        else:
+            self.late_feedback += 1
+
+    def drain(self, now: float) -> list[tuple]:
+        out = []
+        while self._expiry and self._expiry[0][0] <= now:
+            deadline, vid = heapq.heappop(self._expiry)
+            ev = self._pending.pop(vid, None)
+            if ev is None:
+                continue
+            label = self._labels.pop(vid, 0.0)
+            out.append((vid, np.asarray(ev[1], dtype=np.int64), label,
+                        now - ev[0]))
+            self.emitted += 1
+        return out
+
+
+def best_of(fn, reps: int) -> float:
+    fn()                                              # warm-up
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--events", type=int, default=65_536,
+                    help="events per joiner batch (the acceptance size)")
+    ap.add_argument("--steps", type=int, default=40,
+                    help="pipeline steps for the sweep legs")
+    ap.add_argument("--reps", type=int, default=5)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default="BENCH_train_path.json")
+    args = ap.parse_args()
+    if args.smoke:
+        args.events = min(args.events, 8192)
+        args.steps = 8
+        args.reps = 2
+
+    from repro.configs.weips_ctr import FM_FTRL
+    from repro.core import ClusterConfig, WeiPSCluster
+    from repro.data import ClickStream, SampleJoiner
+
+    rng = np.random.default_rng(0)
+    results: dict[str, dict] = {}
+    N = args.events
+    F = 16
+
+    # -- joiner stage (acceptance leg) --------------------------------------
+    stream = ClickStream(feature_space=1 << 18, fields=F, zipf_a=1.2,
+                         seed=0)
+    feats, y = stream.batch(N)
+    vids = np.arange(N, dtype=np.int64)
+    pos = np.flatnonzero(y > 0)
+    fb_t = 1.0 + rng.exponential(3.0, size=len(pos))
+    # the seed's native input: per-event tuples (what ClickStream.events
+    # produced) — built OUTSIDE the timed cycle, as the vectorized arrays
+    # are for the other side
+    feat_tuples = [tuple(row) for row in feats.tolist()]
+
+    # steady-state streaming: ONE long-lived joiner per side (the
+    # production regime — arena/map growth amortized away), each timed
+    # cycle pushes N exposures + feedback at an advancing clock and
+    # drains the previous cycle's expired window
+    seed_j = SeedSampleJoiner(window=10.0)
+    vec_j = SampleJoiner(window=10.0)
+    clock = {"seed": 0.0, "vec": 0.0}
+
+    def seed_cycle():
+        t = clock["seed"]
+        base = int(t) * N                    # fresh vids per cycle
+        for i in range(N):
+            j = seed_j
+            j.offer_exposure(t, base + int(vids[i]), feat_tuples[i])
+        for k, i in enumerate(pos):
+            seed_j.offer_feedback(t + float(fb_t[k]), base + int(vids[i]))
+        clock["seed"] = t + 20.0
+        return seed_j.drain(clock["seed"])
+
+    def vec_cycle():
+        t = clock["vec"]
+        base = int(t) * N
+        vec_j.offer_exposures(t, base + vids, feats)
+        vec_j.offer_feedbacks(t + fb_t, base + vids[pos])
+        clock["vec"] = t + 20.0
+        return vec_j.drain_batch(clock["vec"])
+
+    t_seed = best_of(seed_cycle, max(2, args.reps // 2))
+    t_vec = best_of(vec_cycle, args.reps)
+
+    # sample-equivalence gate: fresh joiners, identical input, same
+    # vids/labels/features in the same emission order
+    gate_seed = SeedSampleJoiner(window=10.0)
+    for i in range(N):
+        gate_seed.offer_exposure(0.0, int(vids[i]), feat_tuples[i])
+    for k, i in enumerate(pos):
+        gate_seed.offer_feedback(float(fb_t[k]), int(vids[i]))
+    want = gate_seed.drain(20.0)
+    gate_vec = SampleJoiner(window=10.0)
+    gate_vec.offer_exposures(0.0, vids, feats)
+    gate_vec.offer_feedbacks(fb_t, vids[pos])
+    got = gate_vec.drain_batch(20.0)
+    equal = len(want) == len(got) and all(
+        w[0] == int(got.view_ids[k]) and w[2] == float(got.labels[k])
+        and np.array_equal(w[1], got.feature_ids[k])
+        for k, w in enumerate(want))
+
+    results["joiner_stage"] = {
+        "events": N,
+        "seed_events_per_sec": N / t_seed,
+        "vectorized_events_per_sec": N / t_vec,
+        "speedup": t_seed / t_vec,
+        "sample_equivalent": bool(equal),
+    }
+
+    # -- dedup/coalesce sweep ----------------------------------------------
+    results["dedup_sweep"] = {}
+    for zipf_a in (1.05, 1.2, 1.4):
+        cl = WeiPSCluster(FM_FTRL, ClusterConfig(
+            num_master=2, num_slave=2, num_replicas=1, num_partitions=4))
+        s = ClickStream(feature_space=1 << 18, fields=FM_FTRL.fields,
+                        zipf_a=zipf_a, seed=1)
+        scn = cl.training.scenario()
+        batch = min(2048, max(256, N // 32))
+        ids, yy = s.batch(batch)
+        cl.train_on_batch(ids, yy, now=0.0)      # compile outside timing
+
+        def step():
+            ids, yy = s.batch(batch)
+            cl.train_on_batch(ids, yy, now=0.0)
+
+        t = best_of(step, max(2, args.reps // 2))
+        results["dedup_sweep"][f"zipf_{zipf_a}"] = {
+            "batch": batch,
+            "dedup_ratio": scn.stats.dedup_ratio,
+            "ms_per_step": t * 1e3,
+            "examples_per_sec": batch / t,
+        }
+
+    # -- bucket-ladder ingest→update latency --------------------------------
+    results["bucket_ladder"] = {}
+    sizes = [37, 170, 700, 1400]
+    for ladder in ((4096,), (256, 2048), (128, 256, 512, 1024, 2048, 4096)):
+        cl = WeiPSCluster(FM_FTRL, ClusterConfig(
+            num_master=2, num_slave=2, num_replicas=1, num_partitions=4,
+            train_buckets=ladder, join_window=0.5))
+        pipe = cl.make_train_pipeline()
+        s = ClickStream(feature_space=1 << 16, fields=FM_FTRL.fields,
+                        seed=2, feedback_delay=0.2)
+        now = [0.0]
+
+        def cycle():
+            for n in sizes:
+                pipe.ingest(s.events_batch(n, now[0]))
+                now[0] += 1.0
+                pipe.tick(now[0])
+            pipe.flush(now[0] + 1.0)
+
+        cycle()                                   # compile bucket shapes
+        t = best_of(cycle, max(2, args.reps // 2))
+        scn = cl.training.scenario()
+        results["bucket_ladder"][str(list(ladder))] = {
+            "ms_per_ingest_update_cycle": t * 1e3,
+            "padding_fraction": scn.stats.padding_fraction,
+            "compiled_bucket_shapes": len(scn.stats.bucket_counts),
+        }
+
+    # -- join-window timeliness sweep ---------------------------------------
+    results["window_sweep"] = {}
+    for window, fast in ((1.0, False), (5.0, False), (15.0, False),
+                         (5.0, True)):
+        j = SampleJoiner(window=window, emit_on_feedback=fast)
+        s = ClickStream(feature_space=1 << 14, fields=F, seed=3,
+                        feedback_delay=3.0, signal_scale=1.0)
+        t, pos_n, tot, gen_pos = 0.0, 0, 0, 0
+        pend_t = np.empty(0, np.float64)
+        pend_v = np.empty(0, np.int64)
+
+        def count(batch):
+            nonlocal pos_n, tot
+            if batch is not None and len(batch):
+                pos_n += int((batch.labels > 0).sum())
+                tot += len(batch)
+
+        for _ in range(args.steps):
+            ev = s.events_batch(max(64, N // 64), t)
+            gen_pos += len(ev.fb_view_ids)
+            j.offer_exposures(ev.t, ev.view_ids, ev.feature_ids)
+            pend_t = np.concatenate([pend_t, ev.fb_t])
+            pend_v = np.concatenate([pend_v, ev.fb_view_ids])
+            due = pend_t <= t            # deliver matured feedback, in order
+            if due.any():
+                order = np.argsort(pend_t[due])
+                count(j.offer_feedbacks(pend_t[due][order],
+                                        pend_v[due][order]))
+                pend_t, pend_v = pend_t[~due], pend_v[~due]
+            count(j.drain_batch(t))
+            t += 1.0
+        if len(pend_v):
+            count(j.offer_feedbacks(pend_t, pend_v))
+        count(j.drain_batch(t + window + 1))
+        key = f"window_{window}" + ("_fast" if fast else "")
+        results["window_sweep"][key] = {
+            "positive_fraction": pos_n / max(tot, 1),
+            # model effect: how many true positives the window catches
+            "captured_positive_fraction": pos_n / max(gen_pos, 1),
+            "join_delay": j.join_delay_percentiles(),
+            "late_feedback": j.late_feedback,
+            "fast_emits": j.fast_emits,
+        }
+
+    out = {
+        "config": {"events": args.events, "fields": F,
+                   "steps": args.steps, "reps": args.reps,
+                   "smoke": args.smoke},
+        "results": results,
+    }
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+    print(json.dumps(out, indent=2))
+    js = results["joiner_stage"]
+    print(f"\njoiner throughput vs seed per-event loop: "
+          f"{js['speedup']:.1f}x at {N} events "
+          f"({js['vectorized_events_per_sec']/1e6:.2f}M events/s); "
+          f"sample-equivalent: {js['sample_equivalent']}")
+
+
+if __name__ == "__main__":
+    main()

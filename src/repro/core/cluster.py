@@ -12,8 +12,6 @@ import random
 from dataclasses import dataclass, field
 from typing import Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.weips_ctr import CTRConfig
@@ -23,17 +21,20 @@ from repro.core.fault_tolerance import (BackupPolicy, Checkpoint,
                                         CheckpointStore, ColdBackup,
                                         ReplicaSet)
 from repro.core.feature_filter import FeatureFilter
-from repro.core.monitor import ProgressiveValidator
 from repro.core.ps import MasterShard, SlaveShard
 from repro.core.queue import PartitionedQueue
 from repro.core.routing import RoutingPlan
 from repro.core.scheduler import ComponentInfo, Scheduler
 from repro.core.streaming import Collector, Gatherer, Pusher, Scatter
 from repro.core.transform import make_transform
+from repro.data.joiner import SampleJoiner
 from repro.models import ctr as ctr_model
 from repro.optim import get_optimizer
 from repro.serving import RowRouter, ServingPlane
 from repro.serving.scheduler import DEFAULT_BUCKETS
+from repro.training.pipeline import TRAIN_BUCKETS, TrainPipeline
+from repro.training.plane import TrainingPlane
+from repro.training.scheduler import TrainScheduler
 
 
 def _make_optimizer(cfg: CTRConfig):
@@ -70,6 +71,14 @@ class ClusterConfig:
     #                                       laggier replicas are skipped
     serve_cache_rows: int = 1 << 20       # serve-cache arena bound per scenario
     serve_buckets: tuple = DEFAULT_BUCKETS  # predict micro-batch bucket sizes
+    # training plane (src/repro/training/)
+    train_buckets: tuple = TRAIN_BUCKETS  # train micro-batch bucket sizes
+    train_max_sync_lag: Optional[int] = None  # backpressure bound: pipelines
+    #                                       throttle while Scatter.lag()
+    #                                       exceeds this many records
+    train_buffer_cap: int = 1 << 16       # per-pipeline sample buffer bound;
+    #                                       beyond it the oldest samples shed
+    join_window: float = 30.0             # default sample-join window (s)
     seed: int = 0
 
 
@@ -106,14 +115,6 @@ class WeiPSCluster:
                                        self.transform))
             self.scheduler.register(ComponentInfo("master", mshard.shard_id))
 
-        # dense parameters (DNN) live on master shard 0's dense bank
-        self.dense = ctr_model.init_dense(model_cfg,
-                                          jax.random.PRNGKey(c.seed))
-        self.dense_slots = {k: self.optimizer.init_slots(jnp.asarray(v))
-                            for k, v in self.dense.items()}
-        for name, v in self.dense.items():
-            self.masters[0].push_dense(name, v)
-
         # ---- serving plane ---------------------------------------------
         self.replica_sets: list[ReplicaSet] = []
         self.scatters: list[Scatter] = []
@@ -143,8 +144,27 @@ class WeiPSCluster:
             for shard in rs.replicas:
                 shard.on_apply = self.serving.on_applied
 
+        # ---- training plane ---------------------------------------------
+        # the symmetric twin of the serving subsystem: per-scenario
+        # weighted/bucketed train steps, admission-gated row creation,
+        # ingest pipelines with sync-lag backpressure (src/repro/training/)
+        self.training = TrainingPlane(
+            self.plan, self.masters, self.groups, self.optimizer,
+            feature_filter=self.filter,
+            on_new_groups=self._on_new_train_groups, seed=c.seed)
+        self.train_scheduler = TrainScheduler(self.training)
+        default_scn = self.training.add_scenario(model_cfg)
+        self.scheduler.register_train_scenario(
+            self.cfg.name, default_scn.name,
+            {"model_type": model_cfg.model_type,
+             "groups": sorted(default_scn.store_groups)})
+        # compat aliases: the default scenario IS the old single-model
+        # training state (same dict objects — mutations shared)
+        self.dense = default_scn.dense
+        self.dense_slots = default_scn.dense_slots
+
         # ---- stability machinery ----------------------------------------
-        self.validator = ProgressiveValidator()
+        self.validator = default_scn.validator
         self.store = CheckpointStore(c.ckpt_root)
         self.cold_backup = ColdBackup(
             self.masters, self.store,
@@ -161,65 +181,86 @@ class WeiPSCluster:
             self.versions, self._hot_switch)
 
         self._predict = ctr_model.predict_fn(model_cfg)
-        self._loss_grads = ctr_model.loss_and_grads_fn(model_cfg)
-        self.step = 0
 
     # ------------------------------------------------------------------
-    # training plane
+    # training plane (src/repro/training/)
     # ------------------------------------------------------------------
-    def _pull_rows(self, ids: np.ndarray) -> dict[str, np.ndarray]:
+    @property
+    def step(self) -> int:
+        return self.training.scenario().step
+
+    def _pull_rows(self, ids: np.ndarray):
         """Gather (B, F, dim) row tensors for every group from masters —
         the training-plane pull, running the SAME argsort ownership pass
         and bulk gather as the serving plane (``RowRouter``); only the
-        fetch differs (master pull with row creation vs. replica read).
-        The seed looped num_groups × num_masters boolean masks here."""
+        fetch differs (master read vs. replica read)."""
         b, f = ids.shape
         uniq, inverse = RowRouter.unique(ids)
-        vals = self.serving.router.pull(
-            uniq, self.groups, self.plan.master_shard(uniq),
-            lambda mid, mids: {g: self.masters[mid].pull(g, mids)
-                               for g in self.groups})
+        vals = self.training.pull_unique(self.training.scenario(), uniq)
         return RowRouter.expand(vals, inverse, (b, f)), uniq, inverse
 
     def train_on_batch(self, ids: np.ndarray, y: np.ndarray,
-                       now: float = 0.0) -> dict:
-        """One online-learning step: predict-before-train validation, then
-        gradient push through the PS optimizer."""
-        admitted = self.filter.admit(np.unique(ids.reshape(-1)))
-        del admitted  # admission pre-creates nothing; rows appear on push
-        rows, uniq, inverse = self._pull_rows(ids)
-        rows_j = {k: jnp.asarray(v) for k, v in rows.items()}
-        dense_j = {k: jnp.asarray(v) for k, v in self.dense.items()}
+                       now: float = 0.0,
+                       weights: Optional[np.ndarray] = None) -> dict:
+        """One online-learning step for the default scenario:
+        predict-before-train validation, then gradient push through the
+        PS optimizer (``TrainingPlane.train_batch``)."""
+        return self.training.train_batch(
+            self.training.scenario(), ids, y, now=now, weights=weights)
 
-        # progressive validation (predict BEFORE applying the update)
-        p = np.asarray(self._predict(rows_j, dense_j))
-        point = self.validator.observe(now, self.step, y, p)
+    def _on_new_train_groups(self, created: dict[str, int]) -> None:
+        """An isolated training scenario added namespaced groups: create
+        their serve tables on every slave replica (the sync stream will
+        carry their records like any other group) and widen the serving
+        plane's store-group view."""
+        for rs in self.replica_sets:
+            for shard in rs.replicas:
+                for g, dim in created.items():
+                    shard.add_group(g, dim)
+        self.serving.store_groups.update(created)
 
-        loss, row_grads, dense_grads = self._loss_grads(
-            rows_j, dense_j, jnp.asarray(y))
+    def add_train_scenario(self, cfg: CTRConfig, *,
+                           name: Optional[str] = None,
+                           share_groups: bool = False):
+        """Train an additional model scenario off the shared PS. With
+        ``share_groups`` the scenario refines the store's own groups (an
+        LR head on an FM store); without it the groups (and dense head)
+        are namespaced ``<name>/...`` — isolated parameters on shared
+        infrastructure. Membership is published to the coordination
+        registry like serving scenarios are."""
+        scn = self.training.add_scenario(cfg, name=name,
+                                         share_groups=share_groups)
+        self.scheduler.register_train_scenario(
+            self.cfg.name, scn.name,
+            {"model_type": cfg.model_type,
+             "groups": sorted(scn.store_groups),
+             "shared": share_groups})
+        return scn
 
-        # aggregate per-row grads over duplicate ids, push to owner masters
-        by_master = self.plan.split_by_master(uniq)
-        for group, g in row_grads.items():
-            g = np.asarray(g).reshape(-1, g.shape[-1])        # (B*F, dim)
-            agg = np.zeros((len(uniq), g.shape[-1]), np.float32)
-            np.add.at(agg, inverse, g)
-            for mid, mids in by_master.items():
-                pos = np.searchsorted(uniq, mids)
-                self.masters[mid].push_grad(group, mids, agg[pos],
-                                            step=self.step)
-        # dense updates (DNN) on master shard 0
-        if dense_grads:
-            for name, g in dense_grads.items():
-                new_w, new_slots = self.optimizer.update(
-                    jnp.asarray(self.dense[name]), self.dense_slots[name],
-                    g, self.step)
-                self.dense[name] = np.asarray(new_w)
-                self.dense_slots[name] = new_slots
-                self.masters[0].push_dense(name, self.dense[name])
+    def make_train_pipeline(self, scenario: Optional[str] = None, *,
+                            window: Optional[float] = None,
+                            emit_on_feedback: bool = False,
+                            neg_sample_rate: float = 1.0) -> TrainPipeline:
+        """Build the ingest pipeline (join → admit → dedup → bucketed
+        train) for a scenario, backpressure-bound to this cluster's sync
+        plane, and register it with the train scheduler."""
+        c = self.ccfg
+        scn = self.training.scenario(scenario)
+        joiner = SampleJoiner(
+            window=c.join_window if window is None else window,
+            emit_on_feedback=emit_on_feedback,
+            neg_sample_rate=neg_sample_rate, seed=c.seed)
+        return TrainPipeline(
+            self.training, scn, joiner, buckets=c.train_buckets,
+            lag_fn=self._sync_lag_records,
+            max_sync_lag=c.train_max_sync_lag,
+            buffer_cap=c.train_buffer_cap)
 
-        self.step += 1
-        return {"loss": float(loss), **point.values}
+    def _sync_lag_records(self) -> int:
+        """Records produced to the queue but not yet applied by the
+        laggiest live serving replica — the backpressure signal."""
+        return max((sc.lag() for sc in self.scatters if sc.shard.alive),
+                   default=0)
 
     # ------------------------------------------------------------------
     # sync plane
@@ -372,7 +413,13 @@ class WeiPSCluster:
         self.serving.invalidate_all()
 
     def downgrade_check(self, now: float) -> Optional[int]:
-        return self.downgrader.maybe_downgrade(now, self.validator)
+        """Domino-downgrade trigger read — fed by the default scenario's
+        windowed ``StreamingEvaluator`` (the training plane's
+        progressive-validation signal), closing the train→metric→degrade
+        loop: a distribution shift the trainer sees trips the serving
+        rollback."""
+        return self.downgrader.maybe_downgrade(
+            now, self.training.scenario().evaluator)
 
     # ------------------------------------------------------------------
     # chaos / recovery controls (fault-tolerance benchmarks)
@@ -444,6 +491,7 @@ class WeiPSCluster:
         serving = self.serving.metrics()
         return {
             "sync_lag_seconds": lag,
+            "sync_lag_records": self._sync_lag_records(),
             "pushed_bytes": sum(p.pushed_bytes for p in self.pushers),
             "queue_bytes": self.queue.produced_bytes,
             "dedup_ratio": float(np.mean(
@@ -451,4 +499,8 @@ class WeiPSCluster:
             "replica_failovers": sum(rs.failovers for rs in self.replica_sets),
             "replica_lag_skips": serving["replica_lag_skips"],
             "serving": serving,
+            # one source of truth for the benchmark and the monitor:
+            # joiner counters (late_feedback, join-delay percentiles),
+            # backpressure shed/throttle counts, dedup/padding ratios
+            "training": self.training.metrics(),
         }

@@ -7,6 +7,19 @@ are kept as time series with windowed smoothing for the downgrade trigger
 (core/downgrade.py; runbook in docs/FAULT_TOLERANCE.md). Validation is
 in-process and synchronous with the training step — there is no separate
 evaluator service in this simulation.
+
+Two evaluators:
+
+* ``ProgressiveValidator`` — unbounded per-batch history (exact AUC per
+  batch); the checkpoint-metrics source.
+* ``StreamingEvaluator`` — the training plane's downgrade signal: bounded
+  per-batch *aggregates* (weighted logloss sums + prediction histograms),
+  so windowed logloss / AUC / calibration over the last W batches are
+  computed from summed aggregates in O(bins) — example-weighted across
+  the window rather than a mean of batch means, and supporting the
+  pipeline's sample weights (negative-downsampling correction). It
+  duck-types the trigger interface (``history`` + ``smoothed``), so
+  ``SmoothedThresholdTrigger`` reads either evaluator unchanged.
 """
 
 from __future__ import annotations
@@ -79,6 +92,86 @@ class ProgressiveValidator:
         if not pts:
             return math.nan
         return float(np.mean([p.values[metric] for p in pts]))
+
+    def latest(self, metric: str) -> float:
+        return self.history[-1].values[metric] if self.history else math.nan
+
+
+def _hist_auc(pos: np.ndarray, neg: np.ndarray) -> float:
+    """AUC from per-bin positive/negative mass (ties within a bin count
+    half — the binned equivalent of rank-based AUC)."""
+    p_tot, n_tot = pos.sum(), neg.sum()
+    if p_tot <= 0 or n_tot <= 0:
+        return 0.5
+    neg_below = np.concatenate(([0.0], np.cumsum(neg)[:-1]))
+    return float((pos * (neg_below + 0.5 * neg)).sum() / (p_tot * n_tot))
+
+
+class StreamingEvaluator:
+    """Windowed streaming progressive validation from per-batch aggregates.
+
+    ``observe`` folds one pre-update prediction batch into weighted
+    aggregates (logloss sum, prediction histograms split by label, pctr /
+    ctr sums); windowed metrics sum the last W aggregates — memory is
+    O(window × bins) regardless of stream length. ``calibration`` is the
+    pCTR/CTR ratio (1.0 = perfectly calibrated), the metric the paper's
+    monitoring dashboards track alongside AUC."""
+
+    def __init__(self, window: int = 50, bins: int = 256):
+        self.window = window
+        self.bins = bins
+        self.history: deque = deque(maxlen=window)   # MetricPoint per batch
+        self._agg: deque = deque(maxlen=window)      # aligned aggregates
+
+    def observe(self, t: float, step: int, y: np.ndarray, p: np.ndarray,
+                weights: Optional[np.ndarray] = None) -> MetricPoint:
+        y = np.asarray(y, np.float64)
+        p = np.asarray(p, np.float64)
+        w = np.ones(len(y)) if weights is None else \
+            np.asarray(weights, np.float64)
+        eps = 1e-7
+        pc = np.clip(p, eps, 1 - eps)
+        ll = -(y * np.log(pc) + (1 - y) * np.log(1 - pc))
+        bi = np.minimum((p * self.bins).astype(np.int64), self.bins - 1)
+        agg = {
+            "w": float(w.sum()),
+            "ll": float((w * ll).sum()),
+            "wp": float((w * p).sum()),
+            "wy": float((w * y).sum()),
+            "pos": np.bincount(bi, weights=w * y, minlength=self.bins),
+            "neg": np.bincount(bi, weights=w * (1 - y),
+                               minlength=self.bins),
+        }
+        self._agg.append(agg)
+        point = MetricPoint(t=t, step=step,
+                            values=self._windowed(len(self._agg)))
+        self.history.append(point)
+        return point
+
+    def _windowed(self, w: int) -> dict[str, float]:
+        aggs = list(self._agg)[-w:]
+        if not aggs:
+            return {"logloss": math.nan, "auc": 0.5, "calibration": 1.0,
+                    "pctr": math.nan, "ctr": math.nan}
+        wsum = sum(a["w"] for a in aggs)
+        pos = np.sum([a["pos"] for a in aggs], axis=0)
+        neg = np.sum([a["neg"] for a in aggs], axis=0)
+        wp = sum(a["wp"] for a in aggs)
+        wy = sum(a["wy"] for a in aggs)
+        return {
+            "logloss": sum(a["ll"] for a in aggs) / max(wsum, 1e-12),
+            "auc": _hist_auc(pos, neg),
+            "calibration": wp / max(wy, 1e-12),
+            "pctr": wp / max(wsum, 1e-12),
+            "ctr": wy / max(wsum, 1e-12),
+        }
+
+    def smoothed(self, metric: str, window: Optional[int] = None) -> float:
+        """Windowed metric over the last ``window`` batches (defaults to
+        the evaluator's own window) — the downgrade trigger's read."""
+        if not self._agg:
+            return math.nan
+        return self._windowed(window or self.window)[metric]
 
     def latest(self, metric: str) -> float:
         return self.history[-1].values[metric] if self.history else math.nan

@@ -364,6 +364,18 @@ class MasterShard:
         self.step = 0
         self.alive = True
 
+    def add_group(self, group: str, dim: int) -> None:
+        """Create a new sparse group online (multi-scenario training: an
+        isolated scenario's namespaced tables appear after construction).
+        Idempotent for an existing group of the same dim."""
+        if group in self.tables:
+            assert self.tables[group].dim == dim, \
+                f"group {group!r} exists with dim {self.tables[group].dim}"
+            return
+        self.tables[group] = SparseTable(dim, tuple(sorted(
+            self.optimizer.init_slots(
+                np.zeros((dim,), np.float32)).keys())), backend=self.backend)
+
     def pull(self, group: str, ids: np.ndarray, *, create: bool = True):
         """Trainer pull: returns current *training* weights for ids."""
         assert self.alive, f"master shard {self.shard_id} is down"
@@ -520,6 +532,16 @@ class SlaveShard:
         self.alive = True
         self.applied_records = 0
         self.skipped_records = 0
+
+    def add_group(self, group: str, dim: int) -> None:
+        """Create a new serve group online (mirrors
+        ``MasterShard.add_group`` so scenario tables stream through the
+        scatter like any other group)."""
+        if group in self.tables:
+            assert self.tables[group].dim == dim, \
+                f"group {group!r} exists with dim {self.tables[group].dim}"
+            return
+        self.tables[group] = SparseTable(dim, backend=self.backend)
 
     @staticmethod
     def _seq_key(record) -> tuple[str, int, int]:

@@ -103,3 +103,22 @@ class Scheduler:
 
     def scenario_meta(self, model: str, scenario: str) -> Optional[dict]:
         return self.registry.get(f"models/{model}/scenarios/{scenario}")
+
+    # -- training scenarios --------------------------------------------------
+    def register_train_scenario(self, model: str, scenario: str,
+                                meta: Optional[dict] = None) -> None:
+        """Publish a *training* scenario — the symmetric twin of
+        ``register_scenario``: trainers discover which model variants are
+        learning off the shared PS (and which groups they own) through
+        the same durable registry predictors use."""
+        self.registry.put(f"models/{model}/train_scenarios/{scenario}",
+                          meta or {})
+
+    def train_scenarios(self, model: str) -> list[str]:
+        prefix = f"models/{model}/train_scenarios/"
+        return [k[len(prefix):] for k in self.registry.keys(prefix)]
+
+    def train_scenario_meta(self, model: str,
+                            scenario: str) -> Optional[dict]:
+        return self.registry.get(
+            f"models/{model}/train_scenarios/{scenario}")

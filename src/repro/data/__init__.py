@@ -1,5 +1,6 @@
-from repro.data.joiner import ExposureEvent, FeedbackEvent, SampleJoiner
-from repro.data.streams import ClickStream, lm_batches
+from repro.data.joiner import (ExposureEvent, FeedbackEvent, JoinedBatch,
+                               JoinedSample, SampleJoiner)
+from repro.data.streams import ClickStream, EventBatch, lm_batches
 
-__all__ = ["ExposureEvent", "FeedbackEvent", "SampleJoiner", "ClickStream",
-           "lm_batches"]
+__all__ = ["ExposureEvent", "FeedbackEvent", "JoinedBatch", "JoinedSample",
+           "SampleJoiner", "ClickStream", "EventBatch", "lm_batches"]

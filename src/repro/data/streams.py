@@ -18,6 +18,23 @@ from repro.data.joiner import ExposureEvent, FeedbackEvent
 
 
 @dataclass
+class EventBatch:
+    """One tick's worth of columnar stream events: every exposure at time
+    ``t`` plus the (delayed) feedback rows its positives will produce —
+    the unit ``TrainPipeline.ingest`` consumes."""
+
+    t: float
+    view_ids: np.ndarray       # (n,) int64
+    feature_ids: np.ndarray    # (n, F) int64
+    labels: np.ndarray         # (n,) ground-truth labels (for evaluation)
+    fb_view_ids: np.ndarray    # (k,) positives' view ids
+    fb_t: np.ndarray           # (k,) feedback arrival times
+
+    def __len__(self) -> int:
+        return len(self.view_ids)
+
+
+@dataclass
 class ClickStream:
     feature_space: int = 1 << 16
     fields: int = 16
@@ -55,19 +72,29 @@ class ClickStream:
         ids = self.features(n)
         return ids, self.labels(ids)
 
+    def events_batch(self, n: int, t: float) -> "EventBatch":
+        """Columnar exposure + feedback events at time ``t`` — the
+        vectorized joiner's native input (``SampleJoiner.offer_exposures``
+        / ``offer_feedbacks``). Feedback rows exist only for positives,
+        delayed by an exponential draw (the exposure→feedback gap the
+        join window must cover)."""
+        ids, y = self.batch(n)
+        vids = np.arange(self._view, self._view + n, dtype=np.int64)
+        self._view += n
+        pos = np.flatnonzero(y > 0)
+        delays = self.rng.exponential(self.feedback_delay, size=len(pos))
+        return EventBatch(t=t, view_ids=vids, feature_ids=ids, labels=y,
+                          fb_view_ids=vids[pos], fb_t=t + delays)
+
     def events(self, n: int, t: float) -> tuple[list[ExposureEvent],
                                                 list[FeedbackEvent]]:
-        """Exposure events at time t; feedback (for positives) delayed."""
-        ids, y = self.batch(n)
-        exposures, feedbacks = [], []
-        for i in range(n):
-            vid = self._view
-            self._view += 1
-            exposures.append(ExposureEvent(
-                t=t, view_id=vid, feature_ids=tuple(ids[i].tolist())))
-            if y[i] > 0:
-                delay = self.rng.exponential(self.feedback_delay)
-                feedbacks.append(FeedbackEvent(t=t + delay, view_id=vid))
+        """Per-event view of ``events_batch`` (legacy object API)."""
+        b = self.events_batch(n, t)
+        exposures = [ExposureEvent(t=t, view_id=int(v),
+                                   feature_ids=tuple(f.tolist()))
+                     for v, f in zip(b.view_ids, b.feature_ids)]
+        feedbacks = [FeedbackEvent(t=float(ft), view_id=int(v))
+                     for v, ft in zip(b.fb_view_ids, b.fb_t)]
         return exposures, feedbacks
 
 

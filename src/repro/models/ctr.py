@@ -63,11 +63,21 @@ def dense_shapes(cfg: CTRConfig) -> dict[str, tuple[int, ...]]:
 
 
 def init_dense(cfg: CTRConfig, key: jax.Array) -> dict[str, np.ndarray]:
+    shapes = dense_shapes(cfg)
+    n_layers = sum(1 for n in shapes if n.startswith("mlp/w"))
     out = {}
-    for name, shape in dense_shapes(cfg).items():
+    for name, shape in shapes.items():
         key, sub = jax.random.split(key)
         if name.endswith(tuple("b%d" % i for i in range(9))):
-            out[name] = np.zeros(shape, np.float32)
+            # hidden biases start small-POSITIVE: embedding rows are
+            # created as zeros on the PS, so with zero biases every ReLU
+            # sits exactly at 0 and its gradient is 0 — no signal ever
+            # reaches the embeddings and the DNN never learns (it was the
+            # weips-dnn-adam seed failure). The output bias stays 0 so the
+            # first prediction is the uninformed prior.
+            i = int(name[len("mlp/b"):])
+            fill = 0.1 if i < n_layers - 1 else 0.0
+            out[name] = np.full(shape, fill, np.float32)
         else:
             out[name] = np.asarray(
                 jax.random.normal(sub, shape) * (shape[0] ** -0.5),
@@ -151,6 +161,30 @@ def loss_and_grads_fn(cfg: CTRConfig) -> Callable:
     @jax.jit
     def loss_and_grads(rows, dense, y):
         val, grads = jax.value_and_grad(loss, argnums=(0, 1))(rows, dense, y)
+        return val, grads[0], grads[1]
+
+    return loss_and_grads
+
+
+def weighted_loss_and_grads_fn(cfg: CTRConfig) -> Callable:
+    """Per-example-weighted BCE — the training plane's step. Weights carry
+    (a) the joiner's negative-downsampling correction (kept negatives
+    weigh 1/rate, so the weighted loss stays unbiased) and (b) the
+    pad-to-bucket zeros: the pipeline pads row tensors up to a pow2
+    bucket so this jits once per bucket shape, and the padded examples'
+    weight of 0 removes them from both the loss and every gradient."""
+    f = _LOGITS[cfg.model_type]
+
+    def loss(rows, dense, y, w):
+        logits = f(rows, dense)
+        per = (jnp.maximum(logits, 0) - logits * y
+               + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+        return jnp.sum(w * per) / jnp.maximum(jnp.sum(w), 1e-9)
+
+    @jax.jit
+    def loss_and_grads(rows, dense, y, w):
+        val, grads = jax.value_and_grad(loss, argnums=(0, 1))(
+            rows, dense, y, w)
         return val, grads[0], grads[1]
 
     return loss_and_grads

@@ -1,3 +1,10 @@
-from repro.training.trainer import (TrainState, init_train_state, make_train_step)
+from repro.training.pipeline import TRAIN_BUCKETS, TrainPipeline
+from repro.training.plane import TrainingPlane
+from repro.training.registry import TrainRegistry, TrainScenario, TrainStats
+from repro.training.scheduler import TrainScheduler
+from repro.training.trainer import (TrainState, init_train_state,
+                                    make_train_step)
 
-__all__ = ["TrainState", "init_train_state", "make_train_step"]
+__all__ = ["TRAIN_BUCKETS", "TrainPipeline", "TrainingPlane",
+           "TrainRegistry", "TrainScenario", "TrainScheduler", "TrainStats",
+           "TrainState", "init_train_state", "make_train_step"]

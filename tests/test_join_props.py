@@ -1,0 +1,251 @@
+"""Sample-equivalence property suite for the vectorized SampleJoiner.
+
+Oracle: the seed per-event dict+heap joiner, kept verbatim below. The
+vectorized joiner must emit the same samples — view ids, feature ids,
+labels, join delays — in the same (deadline, view_id) order, with the
+same late-feedback counts and in-flight sizes, under adversarial event
+schedules: out-of-order feedback, duplicate view_ids (within a batch and
+across offers, including re-offers after emission), feedback-after-emit,
+and exact window-boundary expiry.
+
+Seeded differential runs always execute; hypothesis drives the same
+checker with minimized adversarial schedules when installed (dev extra).
+"""
+
+import heapq
+
+import numpy as np
+import pytest
+
+from repro.data.joiner import ExposureEvent, FeedbackEvent, SampleJoiner
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ModuleNotFoundError:
+    given = settings = st = None
+
+
+# ---------------------------------------------------------------------------
+# the seed joiner, verbatim (the oracle)
+# ---------------------------------------------------------------------------
+class SeedSampleJoiner:
+    def __init__(self, window: float = 30.0):
+        self.window = window
+        self._pending: dict[int, ExposureEvent] = {}
+        self._labels: dict[int, float] = {}
+        self._expiry: list[tuple[float, int]] = []
+        self.late_feedback = 0
+        self.emitted = 0
+
+    def offer_exposure(self, ev: ExposureEvent) -> None:
+        self._pending[ev.view_id] = ev
+        heapq.heappush(self._expiry, (ev.t + self.window, ev.view_id))
+
+    def offer_feedback(self, ev: FeedbackEvent) -> None:
+        if ev.view_id in self._pending:
+            self._labels[ev.view_id] = ev.label
+        else:
+            self.late_feedback += 1
+
+    def drain(self, now: float) -> list[tuple]:
+        out = []
+        while self._expiry and self._expiry[0][0] <= now:
+            deadline, vid = heapq.heappop(self._expiry)
+            ev = self._pending.pop(vid, None)
+            if ev is None:
+                continue
+            label = self._labels.pop(vid, 0.0)
+            out.append((vid, tuple(ev.feature_ids), label, now - ev.t))
+            self.emitted += 1
+        return out
+
+    @property
+    def in_flight(self) -> int:
+        return len(self._pending)
+
+
+# ---------------------------------------------------------------------------
+# the differential checker
+# ---------------------------------------------------------------------------
+def run_schedule(ops, window: float, fields: int = 3):
+    """Apply one op schedule to both joiners, asserting equivalence after
+    every drain. Ops: ("expose", t_array, vids, feats),
+    ("feedback", t, vids), ("drain", now)."""
+    seed = SeedSampleJoiner(window=window)
+    vec = SampleJoiner(window=window)
+    for op in ops:
+        if op[0] == "expose":
+            _, ts, vids, feats = op
+            for i in range(len(vids)):
+                seed.offer_exposure(ExposureEvent(
+                    t=float(ts[i]), view_id=int(vids[i]),
+                    feature_ids=tuple(feats[i].tolist())))
+            vec.offer_exposures(ts, vids, feats)
+        elif op[0] == "feedback":
+            _, t, vids = op
+            for v in vids:
+                seed.offer_feedback(FeedbackEvent(t=t, view_id=int(v)))
+            vec.offer_feedbacks(t, vids)
+        else:
+            _, now = op
+            want = seed.drain(now)
+            got = vec.drain_batch(now)
+            assert len(want) == len(got), (want, got)
+            for k, (vid, feats, label, delay) in enumerate(want):
+                assert int(got.view_ids[k]) == vid
+                assert tuple(got.feature_ids[k].tolist()) == feats
+                assert float(got.labels[k]) == label
+                assert abs(float(got.join_delay[k]) - delay) <= \
+                    1e-4 * max(1.0, abs(delay))      # f32 vs f64 delay
+        assert seed.in_flight == vec.in_flight
+        assert seed.late_feedback == vec.late_feedback
+    # terminal drain: every remaining sample, same totals
+    final = ops[-1][1] if ops and ops[-1][0] == "drain" else 0.0
+    want = seed.drain(final + 10 * window + 100)
+    got = vec.drain_batch(final + 10 * window + 100)
+    assert len(want) == len(got)
+    assert seed.emitted == vec.emitted
+
+
+def random_schedule(rng, *, n_ops=120, vid_space=25, fields=3,
+                    max_batch=6, window=5.0):
+    """Adversarial mix: tiny vid space → constant duplicate collisions;
+    drains jump forward AND land exactly on window boundaries."""
+    ops, t = [], 0.0
+    deadlines = []
+    for _ in range(n_ops):
+        kind = rng.choice(["expose", "expose", "feedback", "drain"])
+        if kind == "expose":
+            n = int(rng.integers(1, max_batch))
+            vids = rng.integers(0, vid_space, size=n)
+            feats = rng.integers(0, 50, size=(n, fields))
+            ts = t + rng.random(n) * 2          # out-of-order event times
+            deadlines.extend((ts + window).tolist())
+            ops.append(("expose", ts, vids, feats))
+        elif kind == "feedback":
+            n = int(rng.integers(1, 4))
+            # feedback may target never-seen vids (late) and duplicates
+            ops.append(("feedback", t,
+                        rng.integers(0, vid_space + 5, size=n)))
+        else:
+            if deadlines and rng.random() < 0.4:
+                # exact window-boundary expiry: drain AT a deadline
+                t = max(t, float(rng.choice(deadlines)))
+            else:
+                t += rng.random() * 2 * window
+            ops.append(("drain", t))
+    ops.append(("drain", t + window * 3))
+    return ops
+
+
+@pytest.mark.parametrize("seed", range(25))
+def test_random_schedules_match_seed_joiner(seed):
+    rng = np.random.default_rng(seed)
+    run_schedule(random_schedule(rng), window=5.0)
+
+
+def test_feedback_after_emit_is_late():
+    ops = [
+        ("expose", np.array([0.0]), np.array([7]),
+         np.array([[1, 2, 3]])),
+        ("drain", 5.0),                      # boundary: deadline == now
+        ("feedback", 5.5, np.array([7])),    # after emit → late
+        ("feedback", 5.5, np.array([99])),   # never seen → late
+    ]
+    run_schedule(ops, window=5.0)
+
+
+def test_duplicate_reoffer_after_emit_uses_stale_entry():
+    """The seed heap keeps an old offer's expiry entry alive across an
+    emission; a re-offered view can therefore emit at the stale entry's
+    deadline. The vectorized joiner reproduces it (checked by oracle)."""
+    ops = [
+        ("expose", np.array([0.0]), np.array([1]), np.array([[1, 1, 1]])),
+        ("expose", np.array([10.0]), np.array([1]), np.array([[2, 2, 2]])),
+        ("drain", 5.0),                      # emits gen-1 (features gen-2!)
+        ("expose", np.array([20.0]), np.array([1]), np.array([[3, 3, 3]])),
+        ("drain", 16.0),                     # stale entry (t=10+5) fires
+        ("drain", 40.0),
+    ]
+    run_schedule(ops, window=5.0)
+
+
+def test_in_batch_duplicates_last_wins():
+    ops = [
+        ("expose", np.array([0.0, 0.5, 1.0]), np.array([4, 4, 4]),
+         np.array([[1, 1, 1], [2, 2, 2], [3, 3, 3]])),
+        ("feedback", 1.5, np.array([4, 4])),
+        ("drain", 5.0),
+        ("drain", 10.0),
+    ]
+    run_schedule(ops, window=4.0)
+
+
+def test_emit_on_feedback_fast_path():
+    """Positives emit the moment feedback arrives; negatives wait the
+    window; a second feedback for an emitted view counts late."""
+    j = SampleJoiner(window=10.0, emit_on_feedback=True)
+    vids = np.arange(6, dtype=np.int64)
+    j.offer_exposures(0.0, vids, np.tile(np.arange(3), (6, 1)))
+    fast = j.offer_feedbacks(2.0, np.array([1, 3]))
+    assert fast is not None and len(fast) == 2
+    assert (fast.labels == 1.0).all()
+    np.testing.assert_allclose(fast.join_delay, 2.0)
+    assert j.fast_emits == 2
+    assert j.offer_feedbacks(3.0, np.array([1])) is None   # already emitted
+    assert j.late_feedback == 1
+    rest = j.drain_batch(10.0)
+    assert len(rest) == 4 and (rest.labels == 0.0).all()
+    assert j.in_flight == 0
+
+
+def test_joiner_metrics_counters():
+    j = SampleJoiner(window=1.0)
+    j.offer_exposures(0.0, np.arange(10, dtype=np.int64),
+                      np.zeros((10, 2), np.int64))
+    j.offer_feedbacks(0.5, np.array([3, 99]))
+    out = j.drain_batch(1.0)
+    m = j.metrics()
+    assert m["emitted"] == len(out) == 10
+    assert m["late_feedback"] == 1
+    assert m["in_flight"] == 0
+    assert m["join_delay"]["p50"] == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis-driven schedules (dev extra)
+# ---------------------------------------------------------------------------
+if st is not None:
+    @st.composite
+    def schedules(draw):
+        n = draw(st.integers(5, 40))
+        ops, t = [], 0.0
+        for _ in range(n):
+            kind = draw(st.sampled_from(
+                ["expose", "expose", "feedback", "drain"]))
+            if kind == "expose":
+                k = draw(st.integers(1, 4))
+                vids = np.array(
+                    [draw(st.integers(0, 12)) for _ in range(k)], np.int64)
+                feats = np.array(
+                    [[draw(st.integers(0, 9)) for _ in range(2)]
+                     for _ in range(k)], np.int64)
+                ts = np.array(
+                    [t + draw(st.floats(0, 3, allow_nan=False))
+                     for _ in range(k)])
+                ops.append(("expose", ts, vids, feats))
+            elif kind == "feedback":
+                k = draw(st.integers(1, 3))
+                ops.append(("feedback", t, np.array(
+                    [draw(st.integers(0, 15)) for _ in range(k)],
+                    np.int64)))
+            else:
+                t += draw(st.floats(0, 8, allow_nan=False))
+                ops.append(("drain", t))
+        return ops
+
+    @given(ops=schedules())
+    @settings(max_examples=60, deadline=None)
+    def test_hypothesis_schedules_match_seed_joiner(ops):
+        run_schedule(ops, window=4.0)

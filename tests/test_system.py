@@ -12,11 +12,7 @@ from repro.data import ClickStream
 
 
 @pytest.mark.parametrize("model", [
-    "weips-lr-ftrl", "weips-fm-ftrl", "weips-fm-sgd",
-    pytest.param("weips-dnn-adam", marks=pytest.mark.xfail(
-        reason="pre-existing seed failure (DNN-Adam logloss does not "
-               "improve within the window); tracked in ROADMAP — not a "
-               "regression gate", strict=False)),
+    "weips-lr-ftrl", "weips-fm-ftrl", "weips-fm-sgd", "weips-dnn-adam",
 ])
 def test_online_learning_improves(model):
     cfg = CTR_CONFIGS[model]
