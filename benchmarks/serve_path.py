@@ -342,6 +342,7 @@ def main() -> None:
     print(f"\npredict-path throughput vs seed loop: "
           f"{results['predict_stage']['throughput_speedup']:.2f}x "
           f"(hit rate {results['predict_stage']['cache_hit_rate']:.2f}); "
+          f"cold pull: {results['pull_stage']['cold_speedup_vs_seed']:.2f}x; "
           f"warm pull: {results['pull_stage']['warm_speedup_vs_seed']:.1f}x; "
           f"bit-equal after sync: {results['cache_bit_equal_after_sync']}")
 

@@ -138,7 +138,8 @@ class WeiPSCluster:
         self.serving = ServingPlane(
             self.plan, self.replica_sets, self.groups,
             max_replica_lag=c.serve_max_lag,
-            cache_rows=c.serve_cache_rows, buckets=c.serve_buckets)
+            cache_rows=c.serve_cache_rows, buckets=c.serve_buckets,
+            ps_backend=c.ps_backend)
         self.add_scenario(model_cfg)          # default scenario
         for rs in self.replica_sets:
             for shard in rs.replicas:

@@ -55,6 +55,11 @@ class IdHashMap:
     (``EMPTY``, ``TOMB`` — the two most-negative int64s)."""
 
     def __init__(self, capacity: int = 1024):
+        # structural version: bumped whenever the key table's CONTENTS or
+        # layout change (alloc/rehash, insert, delete). Device mirrors of
+        # the probe state (kernels/hashmap_probe.py) key their staleness
+        # off this counter.
+        self.version = 0
         self._alloc(1 << max(4, int(capacity - 1).bit_length()))
 
     def _alloc(self, cap: int) -> None:
@@ -65,6 +70,7 @@ class IdHashMap:
         self._vals = np.zeros(cap, dtype=np.int64)
         self._size = 0
         self._tombs = 0
+        self.version += 1
 
     # -- introspection ------------------------------------------------------
     def __len__(self) -> int:
@@ -80,6 +86,36 @@ class IdHashMap:
     @property
     def load_factor(self) -> float:
         return (self._size + self._tombs) / self._cap
+
+    @property
+    def shift(self) -> np.uint64:
+        """The Fibonacci-hash shift for the current capacity — with
+        ``key_table`` this is the whole probe state a device-resident
+        mirror needs (see ``kernels/hashmap_probe.py``)."""
+        return self._shift
+
+    @property
+    def key_table(self) -> np.ndarray:
+        """The raw slot-id array (``EMPTY``/``TOMB`` sentinels included),
+        NOT a copy: read-only input for device probe mirrors. Stale after
+        any mutation — check ``version``."""
+        return self._keys
+
+    @property
+    def val_table(self) -> np.ndarray:
+        """The raw value array, positionally aligned with ``key_table``
+        (garbage at non-live slots). Same staleness contract."""
+        return self._vals
+
+    def clear(self) -> None:
+        """Empty the map WITHOUT shrinking — one memset versus a realloc.
+        Reset-and-refill consumers (the serve cache's cold flush) keep
+        their grown capacity, so the refill pays no growth rehashes and
+        the next probe hits the presized EMPTY-home fast path."""
+        self._keys.fill(EMPTY)
+        self._size = 0
+        self._tombs = 0
+        self.version += 1
 
     def keys(self) -> np.ndarray:
         return self._keys[self._keys > TOMB].copy()    # sentinels are the
@@ -112,10 +148,16 @@ class IdHashMap:
         hit = k == ids
         pos = cur                    # unresolved entries are overwritten in
         found = hit                  # the tail; garbage where found=False
-        # ids missing at an EMPTY home slot also enter the tail (instead of
-        # a dedicated k==EMPTY round-1 test): one extra window round for
-        # the rare miss, two fewer vector ops for every hot batch.
+        # ids missing at an EMPTY home slot are definitive misses (inserts
+        # claim the first non-FULL slot from home, so a live key never sits
+        # past an EMPTY slot on its own chain): resolve them here instead
+        # of paying a windowed tail round. The test runs over the round-1
+        # miss subset only, so all-hit hot batches skip it entirely —
+        # while miss-heavy batches (cold serve pulls probing a near-empty
+        # cache) drop from one (m, W) window gather to an (m,) compare.
         idx = np.flatnonzero(~hit)
+        if idx.size:
+            idx = idx[k.take(idx, mode="clip") != EMPTY]
         if idx.size:
             # tail rounds: window per unresolved id
             cur = (cur[idx] + 1) & self._imask
@@ -194,38 +236,78 @@ class IdHashMap:
             self._insert_new(keys, vals)
 
     def _insert_new(self, ids: np.ndarray, vals: np.ndarray) -> None:
-        """Insert ids known to be unique AND absent. Round-based claiming:
-        every pending id proposes its current probe slot; the first pending
-        id per free slot wins and writes, losers (and ids over occupied
-        slots) advance one step and retry — all vectorized."""
+        """Insert ids known to be unique AND absent. Round-based
+        write-and-verify claiming: every pending id blindly writes its
+        (id, val) pair to its current probe slot — candidates racing for
+        one slot overwrite each other, but the LAST writer lands both
+        arrays consistently — then one re-gather of the key column
+        identifies the winners. Losers (and ids whose slot was already
+        occupied) advance one step and retry — all vectorized. Versus a
+        scatter-claim election into a side array this halves the scatter
+        traffic of the dominant round (the whole batch, on a bulk fill)
+        and needs no per-capacity scratch; versus the sort a
+        ``np.unique(return_index)`` election costs it is O(m) per round.
+        Blind writes are safe because candidate slots are free by the
+        occupancy test taken in the same round, and ids are unique."""
         if len(ids) and (ids <= TOMB).any():
             raise ValueError("ids -2**63 and -2**63+1 are reserved")
         self._maybe_grow(len(ids))
+        self.version += 1
         n = len(ids)
         if n == 0:
             return
+        vals = np.asarray(vals, dtype=np.int64)
         pos = home_slots(np.ascontiguousarray(ids), self._shift)
-        pending = np.arange(n)
+        # int32 pending indices (row counts are far below 2^31): half the
+        # bookkeeping bytes of int64 on compress/advance passes
+        pending = np.arange(n, dtype=np.int32)
+        # bulk-fill shortcut (cleared/presized map, the serve-cache cold
+        # install): with no occupants, round-1 contention is batch-internal
+        # only — skip the occupancy gather and the tombstone accounting
+        pristine = self._size == 0 and self._tombs == 0
         for _ in range(2 * self._cap + 2):
-            p = pos[pending]
-            free = self._keys[p] <= TOMB            # EMPTY or TOMB
-            if free.any():
-                cand = pending[free]
-                _, first = np.unique(pos[cand], return_index=True)
-                win = cand[first]
-                wp = pos[win]
-                self._tombs -= int((self._keys[wp] == TOMB).sum())
-                self._keys[wp] = ids[win]
-                self._vals[wp] = vals[win]
-                self._size += len(win)
-                won = np.zeros(n, dtype=bool)
-                won[win] = True
-                pending = pending[~won[pending]]
-                if pending.size == 0:
+            p = pos.take(pending, mode="clip")
+            if pristine:
+                kf = None                                # everything free
+                whole, cand, cp = True, pending, p
+            else:
+                k = self._keys.take(p, mode="clip")
+                free = k <= TOMB                         # EMPTY or TOMB
+                whole = free.all()
+                if whole:
+                    cand, cp, kf = pending, p, k
+                elif free.any():
+                    cand, cp, kf = pending[free], p[free], k[free]
+                else:
+                    cand = None
+            if cand is not None:
+                idc = ids.take(cand, mode="clip")
+                self._keys[cp] = idc
+                self._vals[cp] = vals.take(cand, mode="clip")
+                winmask = self._keys.take(cp, mode="clip") == idc
+                nwin = int(winmask.sum())
+                if kf is not None:
+                    # pre-write occupancy at the won slots: reclaimed
+                    # tombstones come off the tombstone count
+                    self._tombs -= int((kf[winmask] == TOMB).sum())
+                self._size += nwin
+                if nwin == len(pending):
                     return
+                if whole:
+                    # cand IS pending: losers drop out by mask, no O(n)
+                    # won-table bookkeeping (this is the dominant round of
+                    # a bulk fill — the whole batch is here)
+                    pending = pending[~winmask]
+                else:
+                    won = np.zeros(n, dtype=bool)
+                    won[cand[winmask]] = True
+                    pending = pending[~won.take(pending, mode="clip")]
             # every survivor now sits on a FULL slot (pre-occupied or just
-            # claimed by a race winner): advance the whole front
-            pos[pending] = (pos[pending] + 1) & self._imask
+            # claimed by a race winner): advance the whole front. A
+            # pristine table's survivors lost to a batch sibling, so the
+            # table is no longer conflict-free past round 1.
+            pristine = False
+            pos[pending] = (pos.take(pending, mode="clip") + 1) & self._imask
         raise RuntimeError("IdHashMap insert did not terminate (table full?)")
 
     def delete(self, ids: np.ndarray) -> int:
@@ -238,4 +320,5 @@ class IdHashMap:
             k = len(p)
             self._size -= k
             self._tombs += k
+            self.version += 1
         return int(len(p))

@@ -28,8 +28,68 @@ import numpy as np
 from repro.core.hashmap import EMPTY as _NO_ID
 from repro.core.hashmap import IdHashMap
 from repro.optim import Optimizer
+from repro.optim.optimizers import FTRL
 
 PS_BACKENDS = ("numpy", "pallas")
+
+
+class _DeviceMirror:
+    """Lazily-synced device copy of a ``SparseTable``'s probe state (key
+    limbs + slot map) and arenas — what lets the ``pallas`` backend run
+    probe→gather→update→scatter entirely on device (``ops.fused_lookup``
+    / ``ops.fused_ftrl_apply``) while the host NumPy arrays stay
+    authoritative for snapshots, deltas, and the numpy paths.
+
+    Staleness is cheap to detect, never scanned for: the hash map's
+    structural ``version`` covers the probe state, and the table's
+    mutation clock covers the arenas — rows with ``row_version`` past the
+    last synced clock are re-uploaded incrementally through the scatter
+    kernel (bulk re-upload when most of the table moved). Fused updates
+    write both sides with the same kernel outputs, then ``mark_synced``
+    — steady-state training batches upload nothing but ids and grads."""
+
+    def __init__(self, table: "SparseTable"):
+        self._t = table
+        self._map_version = -1
+        self._synced_mut = -1
+        self.keys_lo = self.keys_hi = self.slot_of = None
+        self.arenas: dict = {}
+
+    @property
+    def shift(self) -> int:
+        return int(self._t._map.shift)
+
+    def sync(self) -> None:
+        import jax.numpy as jnp
+
+        from repro.kernels import ops
+        t = self._t
+        m = t._map
+        if self._map_version != m.version:
+            klo, khi = ops.int64_limbs(m.key_table)
+            self.keys_lo = jnp.asarray(klo)
+            self.keys_hi = jnp.asarray(khi)
+            self.slot_of = jnp.asarray(m.val_table.astype(np.int32))
+            self._map_version = m.version
+        host = {"w": t._w, **t._slots}
+        if not self.arenas or self.arenas["w"].shape != t._w.shape:
+            self.arenas = {k: jnp.asarray(v) for k, v in host.items()}
+        elif self._synced_mut != t._mut:
+            top = t._top
+            dirty = np.flatnonzero(t.row_version[:top] > self._synced_mut)
+            if len(dirty) * 4 > top:
+                self.arenas = {k: jnp.asarray(v) for k, v in host.items()}
+            elif len(dirty):
+                sl = dirty.astype(np.int32)
+                self.arenas = {
+                    k: ops.embedding_scatter(a, sl, host[k][dirty])
+                    for k, a in self.arenas.items()}
+        self._synced_mut = t._mut
+
+    def mark_synced(self) -> None:
+        """Record that the device arenas already hold the table's state at
+        the current clock (a fused kernel just wrote both sides)."""
+        self._synced_mut = self._t._mut
 
 
 class SparseTable:
@@ -68,6 +128,12 @@ class SparseTable:
         self.row_version = np.zeros((cap,), dtype=np.int64)
         self._mut = 0
         self._evict_log: list[tuple[int, np.ndarray]] = []
+        self._dev: Optional[_DeviceMirror] = None   # pallas: lazy mirror
+
+    def _mirror(self) -> _DeviceMirror:
+        if self._dev is None:
+            self._dev = _DeviceMirror(self)
+        return self._dev
 
     # -- capacity ---------------------------------------------------------
     def __len__(self) -> int:
@@ -200,6 +266,12 @@ class SparseTable:
             if not found.all():               # rare: rows to create
                 sl = self._fill_missing(ids, sl, found)
             return self.read_rows(sl, want_w=want_w, slot_names=slot_names)
+        if (self.backend == "pallas" and want_w and len(ids)
+                and not (self.slot_names if slot_names is None
+                         else slot_names)):
+            # fused device path: probe + gather in one jit against the
+            # table mirror — the serve-lookup shape (w only, no slots)
+            return self._gather_device(ids), {}
         sl = self.lookup(ids)
         ok = sl >= 0
         if ok.all():
@@ -224,6 +296,93 @@ class SparseTable:
     def scatter(self, ids: np.ndarray, w: np.ndarray,
                 slots: Optional[dict] = None, *, step: int = 0) -> None:
         self.write_rows(self.ensure(ids), w, slots, step=step)
+
+    def insert_rows(self, ids: np.ndarray, w: np.ndarray,
+                    slots: Optional[dict] = None, *, step: int = 0) -> None:
+        """Probe-free bulk install of rows whose ids are unique and KNOWN
+        absent — e.g. the miss set a ``lookup`` just reported (the serve
+        cache's fill path). Equivalent end state to ``scatter`` on absent
+        ids, but skips its existence probe, the miss-path ``np.unique``
+        re-sort, and the zero-init write the values immediately overwrite
+        — the dominant costs of a cold cache fill."""
+        ids = np.asarray(ids, dtype=np.int64)
+        if not len(ids):
+            return
+        fresh = not len(self._free)
+        sl = self._alloc_slots(len(ids))
+        self._map.insert(ids, sl)
+        # with an empty free list (the post-reset refill) the allocated
+        # slots are one contiguous run — slice writes are straight memcpys
+        # where fancy-index scatters pay per-element address math
+        dst = slice(int(sl[0]), int(sl[0]) + len(ids)) if fresh else sl
+        self._id_of[dst] = ids
+        self._w[dst] = w
+        if slots:
+            for n, v in slots.items():
+                self._slots[n][dst] = v
+        else:
+            for a in self._slots.values():
+                a[dst] = 0.0
+        self.last_touch[dst] = step
+        self.touch_count[dst] = 1
+        self._mut += 1
+        self.row_version[dst] = self._mut
+
+    def reset(self) -> None:
+        """Empty the table but KEEP its allocations (map capacity, arena).
+        A reset-and-refill consumer (serve-cache flush) then re-inserts
+        into a presized map — no growth rehashes, and cold probes resolve
+        on the EMPTY-home fast path. Arena contents are left stale: rows
+        are unreachable once the map is cleared, and every (re)insert path
+        writes before exposing a slot."""
+        self._map.clear()
+        self._id_of[:self._top] = _NO_ID
+        self._free = np.empty(0, dtype=np.int64)
+        self._top = 0
+        self._mut += 1
+        self._evict_log.clear()
+
+    def _gather_device(self, ids: np.ndarray) -> np.ndarray:
+        """Serve-path rows via the device-resident mirror: one jitted
+        probe→gather chain (``ops.fused_lookup``), missing rows zeros.
+        Bit-equal to the host probe + gather (``tests/test_ps_backend``)."""
+        from repro.kernels import ops
+        mir = self._mirror()
+        mir.sync()
+        ilo, ihi = ops.int64_limbs(ids)
+        rows, _found = ops.fused_lookup(
+            mir.keys_lo, mir.keys_hi, mir.slot_of, mir.arenas["w"],
+            ilo, ihi, shift=mir.shift)
+        return np.asarray(rows, dtype=self.dtype)
+
+    def fused_ftrl_update(self, ids: np.ndarray, sl: np.ndarray,
+                          grads: np.ndarray, *, alpha: float, beta: float,
+                          l1: float, l2: float, step: int = 0) -> np.ndarray:
+        """The fused sparse training hot path (pallas backend): one jitted
+        probe→gather→FTRL→scatter chain over the device mirror — no host
+        hop between stages. ``ids`` must be unique and already resolved to
+        arena slots ``sl`` (``ensure`` ran: row creation stays host-side).
+        The kernel's row outputs are written back to the host arrays at
+        ``sl`` — both sides hold identical bits, so the mirror marks
+        itself synced and the next batch uploads nothing but ids+grads.
+        Returns the new serve weights ``w'`` for the rows."""
+        from repro.kernels import ops
+        mir = self._mirror()
+        mir.sync()
+        ilo, ihi = ops.int64_limbs(ids)
+        z_a, n_a, w_a, z2, n2, w2, found = ops.fused_ftrl_apply(
+            mir.keys_lo, mir.keys_hi, mir.slot_of,
+            mir.arenas["z"], mir.arenas["n"], mir.arenas["w"],
+            ilo, ihi, np.asarray(grads, np.float32),
+            shift=mir.shift, alpha=alpha, beta=beta, l1=l1, l2=l2)
+        mir.arenas["z"], mir.arenas["n"], mir.arenas["w"] = z_a, n_a, w_a
+        assert bool(np.asarray(found).all()), \
+            "fused_ftrl_update on ids absent from the map (run ensure first)"
+        w_np = np.asarray(w2).astype(self.dtype, copy=False)
+        self.write_rows(sl, w_np, {"z": np.asarray(z2),
+                                   "n": np.asarray(n2)}, step=step)
+        mir.mark_synced()
+        return w_np
 
     def all_ids(self) -> np.ndarray:
         live = self._id_of[:self._top]
@@ -362,6 +521,7 @@ class MasterShard:
         self.dense = DenseBank()
         self.collector = collector
         self.step = 0
+        self.fused_batches = 0      # pushes taken by the fused device path
         self.alive = True
 
     def add_group(self, group: str, dim: int) -> None:
@@ -408,11 +568,21 @@ class MasterShard:
             grads = grads.take(np.argsort(inv, kind="stable"), axis=0,
                                mode="clip")
         sl = t.ensure(uniq)
-        w, slots = t.read_rows(sl)
-        new_w, new_slots = self.optimizer.update_rows(
-            w, slots, grads, st, backend=self.backend)
-        t.write_rows(sl, new_w.astype(t.dtype, copy=False), new_slots,
-                     step=st)
+        if (self.backend == "pallas" and isinstance(self.optimizer, FTRL)
+                and t.slot_names == ("n", "z")):
+            # fused device route: ensure resolved/created the rows on the
+            # host (authoritative side), then probe→gather→FTRL→scatter
+            # runs as one jitted chain over the table's device mirror
+            o = self.optimizer
+            t.fused_ftrl_update(uniq, sl, grads, alpha=o.alpha, beta=o.beta,
+                                l1=o.l1, l2=o.l2, step=st)
+            self.fused_batches += 1
+        else:
+            w, slots = t.read_rows(sl)
+            new_w, new_slots = self.optimizer.update_rows(
+                w, slots, grads, st, backend=self.backend)
+            t.write_rows(sl, new_w.astype(t.dtype, copy=False), new_slots,
+                         step=st)
         self.step = st + 1
         if self.collector is not None:
             self.collector.record(group, uniq, "upsert")

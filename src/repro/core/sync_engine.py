@@ -18,6 +18,14 @@ shadow of the last-pushed value and skips tensors/rows whose relative
 change is below the threshold, with a periodic full refresh. This is a
 bandwidth/staleness trade the paper's full-value-per-ID consistency
 contract makes safe (skipped pushes are never *wrong*, only stale).
+
+Backends: ``SyncConfig.codec_backend="pallas"`` routes the int8 codec's
+quantize/dequantize through the ``delta_codec`` kernel
+(``docs/KERNELS.md``) — bit-identical to the numpy mirror, so producer
+and consumer may run different backends. The model states synced here
+are dense jax pytrees, not PS tables, so the sparse fused path
+(probe→gather→update→scatter, ``ClusterConfig.ps_backend``) does not
+apply; rows enter the queue already device-materialized.
 """
 
 from __future__ import annotations

@@ -29,7 +29,18 @@ def _gather_kernel(ids_ref, table_block, out_block):
 
 def embedding_lookup(table: jax.Array, ids: jax.Array, *,
                      interpret: bool = False) -> jax.Array:
-    """table (V, D) any float dtype; ids (N,) int32 -> (N, D)."""
+    """Batched row gather: ``out[i] = table[ids[i]]``.
+
+    Args:
+      table: (V, D) any float dtype — the arena (HBM-resident on TPU).
+      ids:   (N,) integer (cast to int32; V must fit int32). Must be
+             in-bounds — no clipping or masking happens here; PS callers
+             resolve/clip slots first.
+    Returns:
+      (N, D) rows, same dtype as ``table``. Grid is one step per id; the
+      BlockSpec index_map DMA-streams row ``ids[i]`` HBM→VMEM per step
+      (scalar-prefetch gather — see module docstring).
+    """
     n = ids.shape[0]
     v, d = table.shape
     grid = (n,)
@@ -68,10 +79,17 @@ def _scatter_add_kernel(ids_ref, upd_block, table_in, table_out):
 def embedding_scatter_add(table: jax.Array, ids: jax.Array,
                           updates: jax.Array, *,
                           interpret: bool = False) -> jax.Array:
-    """table (V, D); ids (N,); updates (N, D) -> new table with rows +=.
+    """Row scatter-add: ``table[ids[i]] += updates[i]`` with duplicate ids
+    accumulating.
 
-    The table is aliased in/out (in-place on device). IDs are sorted here
-    so repeated IDs land on consecutive grid steps (see kernel docstring).
+    Args:
+      table:   (V, D) — aliased in/out (updated in place on device).
+      ids:     (N,) integer, any order (sorted here so duplicates occupy
+               consecutive grid steps — see kernel docstring).
+      updates: (N, D), cast to ``table.dtype`` on accumulate.
+    Returns:
+      the (V, D) table with rows accumulated; untouched rows pass through
+      the alias unchanged.
     """
     order = jnp.argsort(ids)
     ids = ids[order]
@@ -89,6 +107,49 @@ def embedding_scatter_add(table: jax.Array, ids: jax.Array,
     )
     return pl.pallas_call(
         _scatter_add_kernel,
+        grid_spec=gspec,
+        out_shape=jax.ShapeDtypeStruct((v, d), table.dtype),
+        input_output_aliases={2: 0},      # alias table (ids=0, upd=1) -> out
+        interpret=interpret,
+    )(ids.astype(jnp.int32), updates, table)
+
+
+def _scatter_set_kernel(ids_ref, upd_block, table_in, table_out):
+    del ids_ref, table_in        # aliased table passes untouched rows through
+    table_out[...] = upd_block[...].astype(table_out.dtype)
+
+
+def embedding_scatter(table: jax.Array, ids: jax.Array,
+                      updates: jax.Array, *,
+                      interpret: bool = False) -> jax.Array:
+    """Row scatter-SET: ``table[ids[i]] = updates[i]`` — the write half of
+    the fused PS update path (new optimizer rows land back in the arena
+    without a host round-trip).
+
+    Args:
+      table:   (V, D) — aliased in/out (updated in place on device).
+      ids:     (N,) integer, UNIQUE (PS scatter paths dedupe first;
+               duplicates would leave whichever grid step ran last, which
+               is defined on TPU's sequential grid but not a contract).
+      updates: (N, D), cast to ``table.dtype``.
+    Returns:
+      the (V, D) table with the addressed rows replaced; untouched rows
+      pass through the alias unchanged. No sort needed — with unique ids
+      every output block is visited at most once.
+    """
+    n = ids.shape[0]
+    v, d = table.shape
+    gspec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, ids_ref: (i, 0)),          # updates
+            pl.BlockSpec((1, d), lambda i, ids_ref: (ids_ref[i], 0)),  # table
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i, ids_ref: (ids_ref[i], 0)),
+    )
+    return pl.pallas_call(
+        _scatter_set_kernel,
         grid_spec=gspec,
         out_shape=jax.ShapeDtypeStruct((v, d), table.dtype),
         input_output_aliases={2: 0},      # alias table (ids=0, upd=1) -> out

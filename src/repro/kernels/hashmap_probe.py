@@ -1,0 +1,171 @@
+"""Pallas hashmap-probe kernel — the device-resident half of
+``core.hashmap.IdHashMap``.
+
+The PS addressing core resolves minibatches of int64 feature ids to arena
+slots with a Fibonacci-hash, windowed open-addressing probe. This kernel
+runs the SAME probe against a device-resident copy of the map's slot-id
+table, so the sparse hot path (probe → gather → update → scatter) never
+bounces ids back to the host between stages. Semantics mirror
+``IdHashMap._probe`` bit-for-bit: identical home slots, identical window
+walk, identical EMPTY/TOMB handling — the host map stays the oracle (see
+``tests/test_kernels.py``).
+
+TPU adaptation — 32-bit limbs: TPUs (and jax without x64) have no native
+int64 vector arithmetic, so the wrapper reinterprets both the key table
+and the query ids as (lo, hi) uint32 limb pairs (a free ``.view`` on the
+host). The Fibonacci multiply-shift needs only the TOP 32 bits of
+``id * ⌊2^64/φ⌋ mod 2^64`` (capacities are ≤ 2^32, so the slot index
+lives entirely in the upper limb), which a 32×32→hi32 ``mulhi`` plus two
+wrapping multiplies reconstructs exactly. Key equality is a two-limb
+compare; the sentinels split as EMPTY = (0, 0x80000000) and
+TOMB = (1, 0x80000000).
+
+Probe structure (identical to the host map):
+  round 1   — one gather at the home slot for the whole batch; hits
+              resolve, misses over an EMPTY home resolve as not-found;
+  tail      — per round, a ``(m, WINDOW)`` gather of consecutive slots
+              for every still-active id; a window hit resolves (first
+              hit in the window wins, matching ``argmax`` order on the
+              host), a window containing EMPTY resolves as not-found;
+              survivors advance WINDOW slots. A ``lax.while_loop``
+              carries (cur, pos, found, active) as dense masked vectors —
+              no compaction, so shapes stay static for Mosaic.
+
+Memory layout: the key-limb arrays are streamed whole into VMEM per grid
+step (BlockSpec over the full table). That bounds the device-resident
+map at VMEM capacity (~2M slots at 8 B/slot); beyond that the table
+belongs in ANY/HBM memory space with windowed DMA — out of scope here,
+noted in docs/KERNELS.md. Grid is over id blocks; slot gathers are
+vector ``jnp.take(..., mode="clip")`` like the host path (indices are
+in-bounds by construction, clip skips the bounds-check path).
+
+``pos`` is garbage where ``found`` is False — same contract as the host
+probe; callers mask.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_WINDOW = 8                         # must match core.hashmap._WINDOW
+
+# ⌊2^64/φ⌋ split into uint32 limbs (lo, hi). Plain ints: jnp scalars
+# created at module scope would be captured as constants by the kernel
+# trace, which pallas rejects — materialize them inside the trace.
+_FIB_LO = 0x7F4A7C15
+_FIB_HI = 0x9E3779B9
+_SENT_HI = 0x80000000               # EMPTY/TOMB upper limb
+
+
+def _mulhi32(a, b):
+    """High 32 bits of a 32×32-bit unsigned multiply, from 16-bit limbs
+    (uint32 lane arithmetic only — every partial product and carry sum
+    stays below 2^32)."""
+    a0, a1 = a & jnp.uint32(0xFFFF), a >> jnp.uint32(16)
+    b0, b1 = b & jnp.uint32(0xFFFF), b >> jnp.uint32(16)
+    t = a1 * b0 + ((a0 * b0) >> jnp.uint32(16))
+    t2 = a0 * b1 + (t & jnp.uint32(0xFFFF))
+    return a1 * b1 + (t >> jnp.uint32(16)) + (t2 >> jnp.uint32(16))
+
+
+def fib_home_u32(id_lo, id_hi, *, shift: int):
+    """Home slots from uint32 id limbs — bit-equal to
+    ``core.hashmap.home_slots`` on the reassembled int64 ids.
+
+    The full product mod 2^64 is ``lo·FIB + ((hi·FIB_lo + lo·FIB_hi)
+    << 32)``; slot indices are its bits [shift, 64) with shift ≥ 32, so
+    only the upper limb ``mulhi(lo, FIB_lo) + hi·FIB_lo + lo·FIB_hi``
+    (wrapping uint32 adds) is ever needed."""
+    upper = (_mulhi32(id_lo, jnp.uint32(_FIB_LO))
+             + id_hi * jnp.uint32(_FIB_LO) + id_lo * jnp.uint32(_FIB_HI))
+    return (upper >> jnp.uint32(shift - 32)).astype(jnp.int32)
+
+
+def _probe_kernel(klo_ref, khi_ref, ilo_ref, ihi_ref, pos_ref, found_ref, *,
+                  shift, imask, max_rounds):
+    klo = klo_ref[...]
+    khi = khi_ref[...]
+    ilo = ilo_ref[...]
+    ihi = ihi_ref[...]
+    # sentinel-valued queries can never be stored: mask to id 0 and force
+    # not-found at the end (mirrors the host probe's `bad` handling)
+    bad = (ihi == jnp.uint32(_SENT_HI)) & (ilo <= jnp.uint32(1))
+    qlo = jnp.where(bad, jnp.uint32(0), ilo)
+    qhi = jnp.where(bad, jnp.uint32(0), ihi)
+
+    home = fib_home_u32(qlo, qhi, shift=shift)
+    k_lo = jnp.take(klo, home, mode="clip")
+    k_hi = jnp.take(khi, home, mode="clip")
+    hit = (k_lo == qlo) & (k_hi == qhi)
+    empty_home = (k_hi == jnp.uint32(_SENT_HI)) & (k_lo == jnp.uint32(0))
+
+    win = jnp.arange(_WINDOW, dtype=jnp.int32)
+
+    def round_body(state):
+        r, cur, pos, found, active = state
+        cand = (cur[:, None] + win[None, :]) & jnp.int32(imask)   # (n, W)
+        kwlo = jnp.take(klo, cand, mode="clip")
+        kwhi = jnp.take(khi, cand, mode="clip")
+        hitw = (kwlo == qlo[:, None]) & (kwhi == qhi[:, None])
+        ha = hitw.any(axis=1) & active
+        first = jnp.argmax(hitw, axis=1)
+        hpos = jnp.take_along_axis(cand, first[:, None], axis=1)[:, 0]
+        pos = jnp.where(ha, hpos, pos)
+        found = found | ha
+        emptyw = ((kwhi == jnp.uint32(_SENT_HI))
+                  & (kwlo == jnp.uint32(0))).any(axis=1)
+        active = active & ~ha & ~emptyw
+        return r + 1, (cur + jnp.int32(_WINDOW)) & jnp.int32(imask), \
+            pos, found, active
+
+    def round_cond(state):
+        r, _, _, _, active = state
+        return jnp.logical_and(r < max_rounds, active.any())
+
+    init = (jnp.int32(0),
+            (home + 1) & jnp.int32(imask),            # tail starts past home
+            home,                                     # garbage where ~found
+            hit,
+            ~hit & ~empty_home)
+    _, _, pos, found, _ = jax.lax.while_loop(round_cond, round_body, init)
+    pos_ref[...] = pos
+    found_ref[...] = found & ~bad
+
+
+def hashmap_probe(keys_lo: jax.Array, keys_hi: jax.Array,
+                  ids_lo: jax.Array, ids_hi: jax.Array, *,
+                  shift: int, interpret: bool = False):
+    """Probe a device-resident slot-id table.
+
+    Args:
+      keys_lo, keys_hi: (C,) uint32 — the map's key array as little-endian
+        32-bit limbs; C a power of two (``IdHashMap`` capacities always
+        are). EMPTY/TOMB sentinels included.
+      ids_lo, ids_hi: (N,) uint32 — query ids, same limb split.
+      shift: the map's Fibonacci shift (``64 - log2(C)``; 32 ≤ shift ≤ 60).
+
+    Returns:
+      (pos (N,) int32, found (N,) bool). ``pos`` is the key's table slot
+      where ``found``; garbage otherwise. Bit-equal to
+      ``IdHashMap._probe`` on the same state.
+    """
+    n = ids_lo.shape[0]
+    cap = keys_lo.shape[0]
+    kernel = functools.partial(
+        _probe_kernel, shift=shift, imask=cap - 1,
+        max_rounds=cap // _WINDOW + 2)
+    kspec = pl.BlockSpec((cap,), lambda i: (0,))
+    ispec = pl.BlockSpec((n,), lambda i: (0,))
+    return pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[kspec, kspec, ispec, ispec],
+        out_specs=[ispec, ispec],
+        out_shape=[jax.ShapeDtypeStruct((n,), jnp.int32),
+                   jax.ShapeDtypeStruct((n,), jnp.bool_)],
+        interpret=interpret,
+    )(keys_lo, keys_hi, ids_lo, ids_hi)

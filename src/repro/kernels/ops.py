@@ -12,15 +12,28 @@ import functools
 import jax
 import jax.numpy as jnp
 
+import numpy as np
+
 from repro.kernels import decode_attention as _da
 from repro.kernels import delta_codec as _dc
 from repro.kernels import embedding_lookup as _el
 from repro.kernels import flash_attention as _fa
 from repro.kernels import ftrl_row_update as _ftrl
+from repro.kernels import hashmap_probe as _hm
 
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def int64_limbs(a: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Split a host int64 array into (lo, hi) uint32 limb arrays — the id
+    format the device probe consumes (jax runs with x64 disabled; see
+    ``kernels/hashmap_probe.py``). A reinterpreting view + two strided
+    copies; assumes a little-endian host (x86/ARM)."""
+    v = np.ascontiguousarray(a, dtype=np.int64).view(np.uint32)
+    v = v.reshape(-1, 2)
+    return np.ascontiguousarray(v[:, 0]), np.ascontiguousarray(v[:, 1])
 
 
 @functools.partial(jax.jit, static_argnames=())
@@ -32,6 +45,66 @@ def embedding_lookup(table, ids):
 def embedding_scatter_add(table, ids, updates):
     return _el.embedding_scatter_add(table, ids, updates,
                                      interpret=_interpret())
+
+
+@jax.jit
+def embedding_scatter(table, ids, updates):
+    return _el.embedding_scatter(table, ids, updates,
+                                 interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("shift",))
+def hashmap_probe(keys_lo, keys_hi, ids_lo, ids_hi, *, shift):
+    return _hm.hashmap_probe(keys_lo, keys_hi, ids_lo, ids_hi,
+                             shift=shift, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("shift",))
+def fused_lookup(keys_lo, keys_hi, slot_of, arena, ids_lo, ids_hi, *,
+                 shift):
+    """Fused probe→gather: serve-path lookup against a device-resident
+    table mirror, one jit — no host hop between the probe and the row
+    gather. ``slot_of`` is the map's value table (key-slot → arena slot,
+    int32). Missing rows come back as zeros. Returns (rows (N, D), found
+    (N,) bool)."""
+    pos, found = _hm.hashmap_probe(keys_lo, keys_hi, ids_lo, ids_hi,
+                                   shift=shift, interpret=_interpret())
+    slot = jnp.where(found, jnp.take(slot_of, pos, mode="clip"), 0)
+    rows = _el.embedding_lookup(arena, slot, interpret=_interpret())
+    return jnp.where(found[:, None], rows, jnp.zeros((), rows.dtype)), found
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("shift", "alpha", "beta", "l1", "l2"),
+                   donate_argnums=(3, 4, 5))
+def fused_ftrl_apply(keys_lo, keys_hi, slot_of, z_arena, n_arena, w_arena,
+                     ids_lo, ids_hi, grads, *, shift, alpha, beta, l1, l2):
+    """The fused sparse training hot path, one jit end to end:
+    probe → gather (z, n) → FTRL row update → scatter (z', n', w') back
+    into the arenas. No stage output ever leaves the device.
+
+    ``ids`` must be UNIQUE and PRESENT in the map (``MasterShard`` runs
+    ``ensure`` before engaging the fused path; ``found`` is returned so
+    the caller can assert that). The three arenas are donated — callers
+    rebind them from the outputs (the device mirror keeps them resident
+    across batches). Row outputs (z', n', w') are returned as well so the
+    host-authoritative arrays can be updated without re-downloading whole
+    arenas."""
+    pos, found = _hm.hashmap_probe(keys_lo, keys_hi, ids_lo, ids_hi,
+                                   shift=shift, interpret=_interpret())
+    slot = jnp.where(found, jnp.take(slot_of, pos, mode="clip"), 0)
+    z = _el.embedding_lookup(z_arena, slot, interpret=_interpret())
+    n = _el.embedding_lookup(n_arena, slot, interpret=_interpret())
+    z2, n2, w2 = _ftrl.ftrl_row_update(z, n, grads, alpha=alpha, beta=beta,
+                                       l1=l1, l2=l2,
+                                       interpret=_interpret())
+    z_arena = _el.embedding_scatter(z_arena, slot, z2,
+                                    interpret=_interpret())
+    n_arena = _el.embedding_scatter(n_arena, slot, n2,
+                                    interpret=_interpret())
+    w_arena = _el.embedding_scatter(w_arena, slot, w2.astype(w_arena.dtype),
+                                    interpret=_interpret())
+    return z_arena, n_arena, w_arena, z2, n2, w2, found
 
 
 @functools.partial(jax.jit, static_argnames=("alpha", "beta", "l1", "l2"))

@@ -18,6 +18,54 @@ def embedding_scatter_add(table: jax.Array, ids: jax.Array,
     return table.at[ids].add(updates.astype(table.dtype))
 
 
+def embedding_scatter(table: jax.Array, ids: jax.Array,
+                      updates: jax.Array) -> jax.Array:
+    """table (V, D); ids (N,) UNIQUE; updates (N, D) -> (V, D) with rows
+    replaced (set, not add). Duplicate ids are undefined — the PS scatter
+    paths dedupe before calling."""
+    return table.at[ids].set(updates.astype(table.dtype))
+
+
+def hashmap_probe(keys_lo: jax.Array, keys_hi: jax.Array,
+                  ids_lo: jax.Array, ids_hi: jax.Array, *, shift: int):
+    """Oracle for the windowed open-addressing probe, via the full
+    circular probe order (O(N·C) — test scale only).
+
+    For each query, ranks every table slot by probe order from the id's
+    home slot, then bins positions into probe windows (round 1 = the home
+    slot alone, tail rounds = ``_WINDOW``-slot windows): a key is found
+    iff its first match lands in a window no later than the first EMPTY
+    slot's window (a hit anywhere in a window beats an EMPTY in the same
+    window — the kernel checks hits before termination). The Fibonacci
+    home computation is shared with the kernel (``fib_home_u32``), which
+    the test suite pins against the host ``core.hashmap.home_slots``
+    independently. Same limb layout and sentinel handling as the kernel;
+    ``pos`` is garbage where ``found`` is False."""
+    from repro.kernels.hashmap_probe import _WINDOW, fib_home_u32
+    cap = keys_lo.shape[0]
+    n = ids_lo.shape[0]
+    sent_hi = jnp.uint32(0x80000000)
+    bad = (ids_hi == sent_hi) & (ids_lo <= jnp.uint32(1))
+    qlo = jnp.where(bad, jnp.uint32(0), ids_lo)
+    qhi = jnp.where(bad, jnp.uint32(0), ids_hi)
+    home = fib_home_u32(qlo, qhi, shift=shift)
+    order = (home[:, None] + jnp.arange(cap, dtype=jnp.int32)) & (cap - 1)
+    k_lo = keys_lo[order]
+    k_hi = keys_hi[order]
+    match = (k_lo == qlo[:, None]) & (k_hi == qhi[:, None])
+    empty = (k_hi == sent_hi) & (k_lo == jnp.uint32(0))
+    # probe-window index of each probe-order position
+    widx = jnp.where(jnp.arange(cap) == 0, 0,
+                     (jnp.arange(cap) - 1) // _WINDOW + 1)
+    first_m = jnp.argmax(match, axis=1)            # first match position
+    first_e = jnp.argmax(empty, axis=1)            # first EMPTY position
+    m_w = widx[first_m]
+    e_w = jnp.where(empty.any(axis=1), widx[first_e], cap + 1)
+    found = match.any(axis=1) & (m_w <= e_w) & ~bad
+    pos = order[jnp.arange(n), first_m]
+    return pos, found
+
+
 def ftrl_row_update(z, n, g, *, alpha: float, beta: float, l1: float,
                     l2: float):
     """FTRL-proximal row update. All inputs (B, D) fp32.
@@ -46,6 +94,9 @@ def quantize_rows(x: jax.Array):
 
 
 def dequantize_rows(q: jax.Array, scale: jax.Array) -> jax.Array:
+    """Inverse of ``quantize_rows``: int8 codes (B, D) × per-row scale
+    (B, 1) -> float32 rows. Bit-identical to the kernel path (one cast,
+    one multiply — no fused-reciprocal divergence)."""
     return q.astype(jnp.float32) * scale
 
 

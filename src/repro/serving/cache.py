@@ -62,6 +62,13 @@ class ServeCache:
         its own block from the pull; allocating one here would be pure
         waste on exactly the cold path)."""
         self._tick += 1
+        if not len(self.table):
+            # cold cache (just cleared / first request): every id misses.
+            # Skip the whole-request probe against an all-EMPTY map — on
+            # the cold-pull path this probe is pure overhead the seed
+            # (cacheless) never pays.
+            self.misses += len(ids)
+            return None, np.zeros(len(ids), dtype=bool)
         sl = self.table.lookup(ids)
         hit = sl >= 0
         n_hit = int(hit.sum())
@@ -83,12 +90,16 @@ class ServeCache:
         return block, hit
 
     def fill(self, ids: np.ndarray, block: np.ndarray) -> None:
-        """Install pulled rows (unique ids). Trims least-recently-touched
-        rows once the arena outgrows ``max_rows`` — the cache stays
-        bounded no matter how wide the request id distribution is."""
+        """Install pulled rows — the UNIQUE MISS SET of the ``lookup``
+        that preceded this call, so the ids are known absent and the
+        install is a probe-free ``insert_rows`` (the cold-pull fix: no
+        re-probe, no re-sort, no zero-init of rows the block overwrites).
+        Trims least-recently-touched rows once the arena outgrows
+        ``max_rows`` — the cache stays bounded no matter how wide the
+        request id distribution is."""
         if not len(ids):
             return
-        self.table.scatter(ids, block, step=self._tick)
+        self.table.insert_rows(ids, block, step=self._tick)
         if len(self.table) > self.max_rows:
             self._trim()
 
@@ -119,9 +130,11 @@ class ServeCache:
 
     def clear(self) -> None:
         """Full flush — hot switch / downgrade rebuilds serving state
-        wholesale, so every cached row is suspect."""
-        self.table = SparseTable(self.width, backend=self.table.backend,
-                                 init_capacity=1024)
+        wholesale, so every cached row is suspect. Keeps the grown arena
+        and map capacity (``SparseTable.reset``): the refill after a flush
+        re-installs roughly the same working set, so reallocating at 1024
+        rows only re-pays every growth step."""
+        self.table.reset()
 
     def split(self, block: np.ndarray) -> dict[str, np.ndarray]:
         """Carve a combined block back into per-group column views."""

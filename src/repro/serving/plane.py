@@ -48,13 +48,18 @@ class ServingPlane:
                  store_groups: dict[str, int], *,
                  max_replica_lag: Optional[int] = None,
                  cache_rows: int = 1 << 20,
-                 buckets: tuple[int, ...] = DEFAULT_BUCKETS):
+                 buckets: tuple[int, ...] = DEFAULT_BUCKETS,
+                 ps_backend: str = "numpy"):
         self.plan = plan
         self.replica_sets = replica_sets
         self.store_groups = dict(store_groups)
         self.max_replica_lag = max_replica_lag
         self.cache_rows = cache_rows
         self.buckets = tuple(buckets)
+        # row engine for scenario caches: "pallas" keeps each ServeCache's
+        # combined-group arena device-resident (fused probe+gather lookups
+        # via the cache table's mirror); "numpy" is the CPU path
+        self.ps_backend = ps_backend
         self.router = RowRouter(plan)
         self.registry = ScenarioRegistry()
         self.shard_pulled_rows = 0          # rows read from replicas
@@ -70,7 +75,8 @@ class ServingPlane:
         micro-batching scheduler."""
         groups = ctr_model.groups_for(cfg)
         ctr_model.check_scenario_groups(groups, self.store_groups)
-        cache = ServeCache(groups, max_rows=self.cache_rows)
+        cache = ServeCache(groups, max_rows=self.cache_rows,
+                           backend=self.ps_backend)
         scn = Scenario(
             name=name or cfg.name, cfg=cfg, groups=groups,
             dense_shapes=ctr_model.dense_shapes(cfg),
@@ -117,11 +123,18 @@ class ServingPlane:
         if block is None or not hit.all():
             miss_flat = flat if block is None else flat[~hit]
             uniq, inverse = np.unique(miss_flat, return_inverse=True)
-            pulled = self.router.pull_block(
+            # segment-ordered pull: rows arrive grouped by owner shard;
+            # fold the ordering into the inverse-index expansion below
+            # (rank maps uniq position -> pulled row) instead of paying a
+            # row scatter back into uniq order
+            pulled, order = self.router.pull_block_sorted(
                 uniq, scn.cache.width, self.plan.slave_shard(uniq),
                 lambda sid, seg: self._fetch_block(sid, seg, scn))
-            scn.cache.fill(uniq, pulled)
-            expanded = pulled.take(inverse, axis=0, mode="clip")
+            scn.cache.fill(uniq.take(order, mode="clip"), pulled)
+            rank = np.empty(len(uniq), dtype=np.int64)
+            rank[order] = np.arange(len(uniq), dtype=np.int64)
+            expanded = pulled.take(rank.take(inverse, mode="clip"),
+                                   axis=0, mode="clip")
             if block is None:
                 block = expanded               # fully cold: no masked copy
             else:

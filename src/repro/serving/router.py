@@ -64,10 +64,35 @@ class RowRouter:
         ``(m, width)`` block holding every group's columns side by side —
         the layout the serve cache stores, so a whole multi-group request
         fills with one gather per owner segment."""
-        out = np.zeros((len(uniq), width), np.float32)
+        # empty, not zeros: owner_segments partitions ALL of uniq, so every
+        # row is written exactly once — the memset would be pure overhead
+        # on the cold-pull path (this block is multi-MB per request)
+        out = np.empty((len(uniq), width), np.float32)
         for dst, idx in owner_segments(owner):
             out[idx] = fetch(dst, uniq.take(idx, mode="clip"))
         return out
+
+    def pull_block_sorted(self, uniq: np.ndarray, width: int,
+                          owner: np.ndarray,
+                          fetch: Callable[[int, np.ndarray], np.ndarray],
+                          ) -> tuple[np.ndarray, np.ndarray]:
+        """``pull_block`` that leaves the rows in owner-segment order and
+        returns ``(block, order)`` with ``block[i]`` the row for
+        ``uniq[order[i]]``. Each segment lands as one contiguous slice
+        write instead of a row scatter back into ``uniq`` order — callers
+        that re-expand to request order anyway (via an inverse-index
+        gather) fold ``order`` into that existing gather, so the scatter
+        pass disappears entirely from the cold pull."""
+        out = np.empty((len(uniq), width), np.float32)
+        parts = []
+        off = 0
+        for dst, idx in owner_segments(owner):
+            out[off:off + len(idx)] = fetch(dst, uniq.take(idx, mode="clip"))
+            parts.append(idx)
+            off += len(idx)
+        order = (np.concatenate(parts) if parts
+                 else np.empty(0, dtype=np.int64))
+        return out, order
 
     @staticmethod
     def expand(vals: dict[str, np.ndarray], inverse: np.ndarray,

@@ -25,6 +25,7 @@ of truth for the benchmark and the monitor.
 
 from __future__ import annotations
 
+from collections import deque
 from typing import Callable, Optional
 
 import numpy as np
@@ -57,7 +58,9 @@ class TrainPipeline:
         self.lag_fn = lag_fn
         self.max_sync_lag = max_sync_lag
         self.buffer_cap = buffer_cap
-        self._buf: list[JoinedBatch] = []
+        # deque: _take/_shed consume from the head (oldest first) batch
+        # by batch — popleft is O(1) where list.pop(0) shifts the tail
+        self._buf: deque[JoinedBatch] = deque()
         self._buffered = 0
         # feedback waits here until its event time arrives — delivering
         # it early would let the join window see "future" clicks and
@@ -108,7 +111,7 @@ class TrainPipeline:
             over = self._buffered - self.buffer_cap
             head = self._buf[0]
             if len(head) <= over:
-                self._buf.pop(0)
+                self._buf.popleft()
                 self._buffered -= len(head)
                 self.shed_examples += len(head)
             else:
@@ -161,7 +164,7 @@ class TrainPipeline:
             if len(b) <= need:
                 take.append(b)
                 got += len(b)
-                self._buf.pop(0)
+                self._buf.popleft()
             else:
                 take.append(b.slice(0, need))
                 self._buf[0] = b.slice(need)

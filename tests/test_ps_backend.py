@@ -118,3 +118,38 @@ def test_update_rows_matches_update_for_all_optimizers(rng):
         for k in new_s:
             np.testing.assert_allclose(new_s[k], np.asarray(ref_s[k]),
                                        rtol=1e-5, atol=1e-6)
+
+
+def test_cold_pull_end_to_end_pallas_matches_numpy(rng):
+    """Acceptance gate for the fused serve path: a fully cold serve_rows
+    through a ``pallas`` cluster (device-mirror probe + fused
+    probe→gather lookups) is bit-equal to the ``numpy`` staged path —
+    router, replica reads, cache fill and all — and stays bit-equal warm
+    (cache hits) and after a second training sync."""
+    import dataclasses
+
+    from repro.configs.weips_ctr import FM_FTRL
+    from repro.core.cluster import ClusterConfig, WeiPSCluster
+
+    cfg = dataclasses.replace(FM_FTRL, fields=4)
+    pool = np.unique(_rand_ids(rng, 96, space=1 << 40))
+    req = pool[rng.integers(0, len(pool), size=(6, cfg.fields))]
+    served = {}
+    for backend in ("numpy", "pallas"):
+        cl = WeiPSCluster(cfg, ClusterConfig(
+            num_master=1, num_slave=2, num_replicas=1, num_partitions=2,
+            ps_backend=backend))
+        prng = np.random.default_rng(11)          # same rows per backend
+        for mid, mids in cl.plan.split_by_master(pool).items():
+            for g, dim in cl.groups.items():
+                cl.masters[mid].apply_batch(
+                    g, mids,
+                    prng.normal(size=(len(mids), dim)).astype(np.float32))
+        cl.sync_tick(0.0)
+        cold = cl.serve_rows(req)                 # cache starts empty
+        warm = cl.serve_rows(req)
+        served[backend] = (cold, warm)
+    for i in range(2):
+        for g in served["numpy"][i]:
+            np.testing.assert_array_equal(served["numpy"][i][g],
+                                          served["pallas"][i][g])
