@@ -1,23 +1,52 @@
 """WeiPS core: the paper's contribution — symmetric fusion of the training
 parameter plane (master) and serving parameter plane (slave) via streaming
-synchronization, with multi-level fault tolerance and domino downgrade."""
+synchronization, with multi-level fault tolerance and domino downgrade.
 
-from repro.core.cluster import ClusterConfig, WeiPSCluster
-from repro.core.hashmap import IdHashMap
-from repro.core.ps import DenseBank, MasterShard, SlaveShard, SparseTable
-from repro.core.queue import Consumer, PartitionedQueue, Record
-from repro.core.routing import RoutingPlan, owner_segments, reshard_plan
-from repro.core.streaming import (Collector, Gatherer, Pusher, Scatter,
-                                  SyncPipeline)
-from repro.core.transform import (Cast16Transform, Int8Transform, Transform,
-                                  decode_record, make_transform)
+Exports resolve lazily (PEP 562): ``from repro.core import X`` imports only
+the submodule that defines ``X``. This breaks the historical import cycle
+(``repro.training`` → ``core.feature_filter`` → eager ``core.__init__`` →
+``core.cluster`` → ``repro.training.pipeline`` mid-initialization) and
+keeps worker processes of the multi-process runtime (``launch/worker.py``)
+from paying the jax-model import cone just to reach the PS/queue layer.
+"""
 
-__all__ = [
-    "ClusterConfig", "WeiPSCluster", "DenseBank", "IdHashMap", "MasterShard",
-    "SlaveShard",
-    "SparseTable", "Consumer", "PartitionedQueue", "Record", "RoutingPlan",
-    "owner_segments", "reshard_plan", "Collector", "Gatherer", "Pusher",
-    "Scatter",
-    "SyncPipeline", "Cast16Transform", "Int8Transform", "Transform",
-    "decode_record", "make_transform",
-]
+_EXPORTS = {
+    "ClusterConfig": "repro.core.cluster",
+    "WeiPSCluster": "repro.core.cluster",
+    "DenseBank": "repro.core.ps",
+    "IdHashMap": "repro.core.hashmap",
+    "MasterShard": "repro.core.ps",
+    "SlaveShard": "repro.core.ps",
+    "SparseTable": "repro.core.ps",
+    "Consumer": "repro.core.queue",
+    "FileQueue": "repro.core.queue",
+    "PartitionedQueue": "repro.core.queue",
+    "Record": "repro.core.queue",
+    "RoutingPlan": "repro.core.routing",
+    "owner_segments": "repro.core.routing",
+    "reshard_plan": "repro.core.routing",
+    "Collector": "repro.core.streaming",
+    "Gatherer": "repro.core.streaming",
+    "Pusher": "repro.core.streaming",
+    "Scatter": "repro.core.streaming",
+    "SyncPipeline": "repro.core.streaming",
+    "Cast16Transform": "repro.core.transform",
+    "Int8Transform": "repro.core.transform",
+    "Transform": "repro.core.transform",
+    "decode_record": "repro.core.transform",
+    "make_transform": "repro.core.transform",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    mod = _EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(f"module 'repro.core' has no attribute {name!r}")
+    import importlib
+    return getattr(importlib.import_module(mod), name)
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS))

@@ -22,7 +22,7 @@ from repro.core.fault_tolerance import (BackupPolicy, Checkpoint,
                                         ReplicaSet)
 from repro.core.feature_filter import FeatureFilter
 from repro.core.ps import MasterShard, SlaveShard
-from repro.core.queue import PartitionedQueue
+from repro.core.queue import FileQueue, PartitionedQueue
 from repro.core.routing import RoutingPlan
 from repro.core.scheduler import ComponentInfo, Scheduler
 from repro.core.streaming import Collector, Gatherer, Pusher, Scatter
@@ -50,6 +50,7 @@ class ClusterConfig:
     num_slave: int = 2           # slave shards (serving partition count)
     num_replicas: int = 2        # hot-backup replicas per slave shard
     num_partitions: int = 8
+    queue_dir: Optional[str] = None  # durable FileQueue root; None=in-memory
     gather_mode: str = "realtime"
     gather_threshold: int = 4096
     gather_period: float = 1.0
@@ -94,7 +95,11 @@ class WeiPSCluster:
         self.transform = make_transform(c.codec, self.optimizer,
                                         backend=c.codec_backend)
         self.scheduler = Scheduler()
-        self.queue = PartitionedQueue(c.num_partitions)
+        # a queue_dir swaps the in-memory log for the durable file-backed
+        # one (same interface) — the stream then survives process death
+        # and can be shared with the multi-process runtime (launch/).
+        self.queue = FileQueue(c.queue_dir, c.num_partitions) \
+            if c.queue_dir else PartitionedQueue(c.num_partitions)
         self.filter = FeatureFilter(c.feature_min_count, c.feature_ttl_steps)
 
         # ---- training plane -------------------------------------------

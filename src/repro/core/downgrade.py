@@ -77,15 +77,29 @@ class DominoDowngrade:
     def __init__(self, trigger: SmoothedThresholdTrigger,
                  versions: VersionManager,
                  switch_fn: Callable[[Checkpoint], None],
-                 strategy: str = "latest"):
+                 strategy: str = "latest", cooldown: float = 0.0):
         self.trigger = trigger
         self.versions = versions
         self.switch_fn = switch_fn
         self.strategy = strategy
+        # refractory window after a switch: the smoothed trigger metric
+        # still averages pre-switch contrast points for up to ``window``
+        # batches, so without a cooldown one bad stretch cascades through
+        # every stored version before the restored model gets a reading.
+        self.cooldown = cooldown
         self.downgrades: list[tuple[float, int]] = []
+
+    def active(self, now: float) -> bool:
+        """True while the last downgrade's cooldown window is open — the
+        "fired" state; it un-fires when the window closes without the
+        trigger tripping again."""
+        return bool(self.downgrades) and \
+            (now - self.downgrades[-1][0]) < self.cooldown
 
     def maybe_downgrade(self, now: float,
                         validator: ProgressiveValidator) -> Optional[int]:
+        if self.active(now):
+            return None
         if not self.trigger.check(validator):
             return None
         return self.execute(now)

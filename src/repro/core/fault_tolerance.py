@@ -210,6 +210,42 @@ def iter_owner_rows(rows: dict, owner: np.ndarray):
         yield dst, _take_rows(rows, idx)
 
 
+def fold_chain(links_shard_snaps, codec_backend: str = "numpy") \
+        -> dict[int, dict]:
+    """Fold a full+delta chain of per-shard snapshots (apply order: full
+    first) into full-equivalent columnar state — deletes drop rows, delta
+    rows override base rows, dense tensors merge by version counter.
+
+    ``links_shard_snaps`` iterates ``{shard_id: snapshot}`` per chain
+    link, each snapshot in the ``MasterShard.snapshot`` /
+    ``delta_snapshot`` wire format (possibly int8-compressed). Shared by
+    ``ColdBackup.materialize`` (in-process checkpoints) and the
+    multi-process runtime's manifest store (per-shard part files) — one
+    implementation of the chain-merge semantics for both planes."""
+    snaps: dict[int, dict] = {}
+    for link in links_shard_snaps:
+        for sid, snap in link.items():
+            tables = {g: _table_rows(t, codec_backend)
+                      for g, t in snap["tables"].items()}
+            cur = snaps.get(sid)
+            if cur is None:
+                cur = {"shard_id": sid, "step": snap["step"],
+                       "tables": {g: _merge_rows(_empty_rows(r), r)
+                                  for g, r in tables.items()},
+                       "dense": {"tensors": {}, "slots": {},
+                                 "versions": {}}}
+                snaps[sid] = cur
+            else:
+                cur["step"] = snap["step"]
+                for g, rows in tables.items():
+                    cur["tables"][g] = _merge_rows(
+                        cur["tables"].get(g) or _empty_rows(rows), rows)
+            dense = snap.get("dense")
+            if dense:
+                merge_dense(cur["dense"], dense)
+    return snaps
+
+
 class CheckpointStore:
     """Two-tier checkpoint storage. The local tier is in-memory (stands in
     for local disk); the remote tier serializes to files under ``root`` —
@@ -454,27 +490,8 @@ class ColdBackup:
         v = version if version is not None else self.store.latest()
         assert v is not None, "no checkpoint available"
         links = self.chain(v)
-        snaps: dict[int, dict] = {}
-        for ckpt in links:
-            for sid, snap in ckpt.shard_snaps.items():
-                tables = {g: _table_rows(t, self.codec_backend)
-                          for g, t in snap["tables"].items()}
-                cur = snaps.get(sid)
-                if cur is None:
-                    cur = {"shard_id": sid, "step": snap["step"],
-                           "tables": {g: _merge_rows(_empty_rows(r), r)
-                                      for g, r in tables.items()},
-                           "dense": {"tensors": {}, "slots": {},
-                                     "versions": {}}}
-                    snaps[sid] = cur
-                else:
-                    cur["step"] = snap["step"]
-                    for g, rows in tables.items():
-                        cur["tables"][g] = _merge_rows(
-                            cur["tables"].get(g) or _empty_rows(rows), rows)
-                dense = snap.get("dense")
-                if dense:
-                    merge_dense(cur["dense"], dense)
+        snaps = fold_chain((c.shard_snaps for c in links),
+                           self.codec_backend)
         tip = links[-1]
         return {"version": tip.version, "created_at": tip.created_at,
                 "queue_offsets": tip.queue_offsets,

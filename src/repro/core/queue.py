@@ -16,8 +16,13 @@ it (gather/push/scatter, fault tolerance, downgrade) is transport-agnostic.
 
 from __future__ import annotations
 
+import fcntl
+import json
+import os
 import pickle
+import struct
 import threading
+import zlib
 from dataclasses import dataclass, field
 from typing import Any, Iterable, Optional
 
@@ -115,6 +120,175 @@ class PartitionedQueue:
         """Retention: drop records below offset (offsets stay absolute)."""
         # Keep absolute offsets simple for this simulation: mark, don't free.
         del partition, offset
+
+
+class FileQueue:
+    """File-backed partitioned log with the :class:`PartitionedQueue`
+    interface — the transport of the multi-process cluster runtime.
+
+    One append-only file per partition holds CRC-framed pickled records::
+
+        frame := header(8B: <II little-endian (body_len, crc32(body))) body
+
+    Durability model (what the chaos harness relies on):
+
+      * Each frame is written with a single ``write(2)`` on an ``O_APPEND``
+        fd, so concurrent producers (one Pusher per master process) never
+        interleave bytes of a frame on a local filesystem.
+      * A producer SIGKILLed mid-append leaves at most one torn frame at
+        the tail. Readers validate length and CRC and silently stop at the
+        first bad frame, so a torn tail is indistinguishable from "not yet
+        produced" — exactly Kafka's unflushed-segment behaviour.
+      * Frames live in the page cache after ``write`` returns, so they
+        survive process death (the failure unit injected by the chaos
+        harness) without fsync; only whole-machine crashes can lose them.
+
+    Offsets are record indices, identical to :class:`PartitionedQueue`, so
+    checkpointed Scatter offsets seek/replay unchanged. Every process
+    (producer or consumer) holds its own ``FileQueue`` over the shared
+    directory; readers discover frames appended by other processes by
+    re-scanning the file tail on demand.
+    """
+
+    _HDR = struct.Struct("<II")
+
+    def __init__(self, root: str, num_partitions: Optional[int] = None):
+        self.root = str(root)
+        os.makedirs(self.root, exist_ok=True)
+        meta_path = os.path.join(self.root, "meta.json")
+        if os.path.exists(meta_path):
+            with open(meta_path) as f:
+                existing = json.load(f)["num_partitions"]
+            assert num_partitions in (None, existing), \
+                f"queue at {root} has {existing} partitions"
+            num_partitions = existing
+        else:
+            assert num_partitions is not None and num_partitions >= 1
+            tmp = meta_path + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump({"num_partitions": num_partitions}, f)
+            os.replace(tmp, meta_path)
+        self.num_partitions = int(num_partitions)
+        # Per-partition frame index: list of (file_pos, body_len) for every
+        # valid frame scanned so far, plus the byte position scanning
+        # reached. Rebuilt lazily per process; torn tails end the scan.
+        self._index: list[list[tuple[int, int]]] = \
+            [[] for _ in range(self.num_partitions)]
+        self._scanned: list[int] = [0] * self.num_partitions
+        self._wfds: list[Optional[int]] = [None] * self.num_partitions
+        self._rfds: list[Optional[int]] = [None] * self.num_partitions
+        self._lock = threading.Lock()
+        self.produced_bytes = 0          # this process's contribution
+        self.produced_records = 0
+
+    def _path(self, partition: int) -> str:
+        return os.path.join(self.root, f"part-{partition:05d}.log")
+
+    def _wfd(self, partition: int) -> int:
+        if self._wfds[partition] is None:
+            fd = os.open(self._path(partition),
+                         os.O_WRONLY | os.O_APPEND | os.O_CREAT, 0o644)
+            self._wfds[partition] = fd
+            # Tail repair: a writer SIGKILLed mid-append leaves a torn
+            # frame; frames appended after it would be unreachable (scans
+            # stop at the first bad frame). Truncate the garbage under the
+            # append lock — live writers hold it across their write, so a
+            # valid in-flight frame can never be clipped.
+            fcntl.flock(fd, fcntl.LOCK_EX)
+            try:
+                self._extend_index(partition)
+                if os.fstat(fd).st_size > self._scanned[partition]:
+                    os.ftruncate(fd, self._scanned[partition])
+            finally:
+                fcntl.flock(fd, fcntl.LOCK_UN)
+        return self._wfds[partition]
+
+    def _rfd(self, partition: int) -> int:
+        if self._rfds[partition] is None:
+            self._rfds[partition] = os.open(
+                self._path(partition), os.O_RDONLY | os.O_CREAT, 0o644)
+        return self._rfds[partition]
+
+    def _extend_index(self, partition: int) -> None:
+        """Scan frames appended (possibly by other processes) since the
+        last scan. Stops at a short or CRC-failing frame — a torn tail."""
+        fd = self._rfd(partition)
+        size = os.fstat(fd).st_size
+        pos = self._scanned[partition]
+        index = self._index[partition]
+        while pos + self._HDR.size <= size:
+            hdr = os.pread(fd, self._HDR.size, pos)
+            if len(hdr) < self._HDR.size:
+                break
+            body_len, crc = self._HDR.unpack(hdr)
+            body_pos = pos + self._HDR.size
+            if body_pos + body_len > size:
+                break                                   # torn tail
+            body = os.pread(fd, body_len, body_pos)
+            if len(body) < body_len or zlib.crc32(body) != crc:
+                break                                   # torn/corrupt tail
+            index.append((body_pos, body_len))
+            pos = body_pos + body_len
+        self._scanned[partition] = pos
+
+    # -- producer side ---------------------------------------------------
+    def produce(self, partition: int, record: Record) -> int:
+        return self.produce_many(partition, [record]) - 1
+
+    def produce_many(self, partition: int, records: Iterable[Record]) -> int:
+        """Appends one frame per record; returns the next offset (the
+        record count observed in this process after the append)."""
+        with self._lock:
+            fd = self._wfd(partition)
+            fcntl.flock(fd, fcntl.LOCK_EX)
+            try:
+                for record in records:
+                    body = pickle.dumps(record, protocol=4)
+                    os.write(fd, self._HDR.pack(len(body), zlib.crc32(body))
+                             + body)
+                    self.produced_bytes += record.nbytes()
+                    self.produced_records += 1
+            finally:
+                fcntl.flock(fd, fcntl.LOCK_UN)
+            self._extend_index(partition)
+            return len(self._index[partition])
+
+    # -- consumer side ----------------------------------------------------
+    def consume(self, partition: int, offset: int,
+                max_records: Optional[int] = None) -> tuple[list[Record], int]:
+        with self._lock:
+            self._extend_index(partition)
+            index = self._index[partition]
+            end = len(index)
+            if max_records is not None:
+                end = min(end, offset + max_records)
+            fd = self._rfd(partition)
+            out = [pickle.loads(os.pread(fd, length, pos))
+                   for pos, length in index[offset:end]]
+            # Never rewind a consumer that seeked past a tail not yet
+            # visible to this process (recovering replicas do this).
+            return out, end if out else max(end, offset)
+
+    def latest_offset(self, partition: int) -> int:
+        with self._lock:
+            self._extend_index(partition)
+            return len(self._index[partition])
+
+    def latest_offsets(self) -> dict[int, int]:
+        return {p: self.latest_offset(p) for p in range(self.num_partitions)}
+
+    def truncate_before(self, partition: int, offset: int) -> None:
+        """Retention: offsets stay absolute (same policy as the in-memory
+        queue — mark, don't free)."""
+        del partition, offset
+
+    def close(self) -> None:
+        with self._lock:
+            for fds in (self._wfds, self._rfds):
+                for i, fd in enumerate(fds):
+                    if fd is not None:
+                        os.close(fd)
+                        fds[i] = None
 
 
 class Consumer:

@@ -164,6 +164,16 @@ class Pusher:
         self._seq[group] = s
         return s
 
+    def seqs(self) -> dict[str, int]:
+        """Per-group sequence counters for the checkpoint cut. A restored
+        pusher re-emits the SAME seq for a replayed flush, which is what
+        lets slaves LWW-skip (or idempotently re-apply) replayed records
+        instead of treating them as fresh writes."""
+        return dict(self._seq)
+
+    def restore_seqs(self, seqs: dict[str, int]) -> None:
+        self._seq = dict(seqs)
+
     def push(self, gathered: dict[tuple[str, str], np.ndarray],
              now: float = 0.0) -> int:
         """Returns number of records produced."""
@@ -271,11 +281,19 @@ class Scatter:
             shard.shard_id), offsets)
         self.applied = 0
         self.last_record_time = 0.0
+        # called with the polled records after the consumer advanced but
+        # BEFORE any of them is applied — the crash window between fetch
+        # and apply. The chaos harness kills here; a process dying at this
+        # point re-polls the same records after restart (at-least-once),
+        # and full-value upserts make the redelivery idempotent.
+        self.pre_apply = None
 
     def poll(self, max_records: Optional[int] = None) -> int:
         recs = self.consumer.poll(max_records)
         if not recs:
             return 0
+        if self.pre_apply is not None:
+            self.pre_apply(recs)
         # model routing: keep only ids owned by this slave shard — with
         # num_partitions % num_slave == 0 this filter is a no-op for
         # sparse groups (partition congruence), but guards dense

@@ -188,7 +188,11 @@ class ModelSyncEngine:
     _MOMENTUM_OPTS = ("adam", "momentum")
 
     def __init__(self, cfg: ModelConfig, params: PyTree,
-                 sync: Optional[SyncConfig] = None):
+                 sync: Optional[SyncConfig] = None, queue=None):
+        """``queue`` injects an external transport with the
+        ``PartitionedQueue`` interface (e.g. a durable ``FileQueue``
+        shared across processes); by default the engine owns an
+        in-memory queue, matching the single-process wiring."""
         self.cfg = cfg
         self.sync = sync or SyncConfig()
         s = self.sync
@@ -199,7 +203,11 @@ class ModelSyncEngine:
         self._embed_touched: set[int] = set()
         # momentum optimizers keep updating previously-routed experts too
         self._expert_touched: dict[str, set[int]] = {}
-        self.queue = PartitionedQueue(s.num_partitions)
+        if queue is not None:
+            assert queue.num_partitions == s.num_partitions, \
+                "injected queue partition count must match SyncConfig"
+        self.queue = queue if queue is not None else \
+            PartitionedQueue(s.num_partitions)
         self.transform = make_transform(s.codec, backend=s.codec_backend)
         self.gatherer = Gatherer(s.gather_mode, threshold=s.threshold,
                                  period=s.period)

@@ -4,12 +4,17 @@ shannon/kernels pattern: weak-type-correct, shardable, no allocation."""
 
 from __future__ import annotations
 
+import os
+import sys
+from dataclasses import dataclass
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
+
+from repro.launch import mesh as mesh_lib  # noqa: F401 (ProcSlot annotation)
 
 from repro.configs.base import ModelConfig
 from repro.configs.shapes import InputShape
@@ -76,6 +81,48 @@ def abstract_cache(cfg: ModelConfig, m: MeshInfo, batch: int,
                         abstract=True, kv_quant=kv_quant)
     return _with_shardings(shapes, cache_pspecs(cfg, m, batch, kv_quant),
                            m.mesh)
+
+
+# ---------------------------------------------------------------------------
+# process launch specs (multi-process cluster runtime, launch/runtime.py)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ProcSpec:
+    """Everything needed to launch (or relaunch) one worker process: the
+    grid slot it fills, its RPC socket path, and the exact argv. Respawn
+    after a SIGKILL reuses the same spec — the socket path is stable per
+    slot, so the supervisor reconnects without renegotiation."""
+
+    slot: "mesh_lib.ProcSlot"
+    root: str                         # runtime directory (queue/ckpt/sock)
+    argv: tuple[str, ...]
+    socket: str
+    log_path: str
+
+    @property
+    def name(self) -> str:
+        return self.slot.name
+
+
+def proc_spec_for(slot, root: str) -> ProcSpec:
+    """Launch spec for one grid slot. Workers run the package entry
+    ``python -m repro.launch.worker`` against the shared runtime dir;
+    role/shard/replica arrive as argv so the worker imports only the
+    numpy PS/queue layer it needs."""
+    socket = os.path.join(root, "sock", f"{slot.name}.sock")
+    log_path = os.path.join(root, "logs", f"{slot.name}.log")
+    argv = (sys.executable, "-m", "repro.launch.worker",
+            "--role", slot.role, "--shard", str(slot.shard_id),
+            "--replica", str(-1 if slot.replica is None else slot.replica),
+            "--root", root, "--socket", socket)
+    return ProcSpec(slot=slot, root=root, argv=argv, socket=socket,
+                    log_path=log_path)
+
+
+def plan_cluster_procs(pmesh, root: str) -> list[ProcSpec]:
+    """Placement for a whole cluster: one spec per ``ProcessMesh`` slot
+    (masters first, then slave replicas)."""
+    return [proc_spec_for(slot, root) for slot in pmesh.slots()]
 
 
 def input_specs(cfg: ModelConfig, shape: InputShape,

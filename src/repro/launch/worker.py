@@ -1,0 +1,260 @@
+"""Worker process entry for the multi-process cluster runtime: one master
+PS shard or one slave PS replica per OS process, serving RPCs from the
+supervisor (``launch/runtime.py``) over a unix socket and exchanging sync
+records through the shared durable ``FileQueue``.
+
+Run as ``python -m repro.launch.worker --role master --shard 0 --root
+<dir> --socket <path>`` — ``launch/specs.py`` builds these argvs. The
+worker reads the cluster shape from ``<root>/runtime.json`` and touches
+only the numpy PS/queue layer (plus the optimizer module), so a SIGKILL +
+respawn cycle costs process startup, not model compilation.
+
+Fault injection: the supervisor arms a subset of the run's
+:class:`~repro.launch.chaos.FaultPlan` on each worker (``arm`` RPC); the
+worker calls ``FaultHooks.check`` at the instrumented points documented in
+``launch/chaos.py`` — a ``kill`` event SIGKILLs the process mid-operation,
+exactly at a deterministic (target, point, step) coordinate.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import numpy as np
+
+from repro.launch.chaos import FaultEvent, FaultHooks
+from repro.launch.transport import RpcServer
+
+
+def _load_runtime_cfg(root: str) -> dict:
+    with open(os.path.join(root, "runtime.json")) as f:
+        return json.load(f)
+
+
+def _build_optimizer(cfg: dict):
+    from repro.optim import get_optimizer
+    return get_optimizer(cfg["optimizer"], **cfg.get("optimizer_kwargs", {}))
+
+
+def _sorted_table_state(table) -> dict:
+    """Canonical (id-sorted) columnar dump of one table — the unit the
+    trajectory-equality tests compare bit-for-bit."""
+    snap = table.snapshot()
+    order = np.argsort(snap["ids"], kind="stable")
+    return {"ids": snap["ids"][order], "w": snap["w"][order],
+            "slots": {n: v[order] for n, v in snap["slots"].items()}}
+
+
+class MasterWorker:
+    """One master PS shard + its collect→gather→push stages."""
+
+    def __init__(self, shard_id: int, root: str, cfg: dict):
+        from repro.core.ps import MasterShard
+        from repro.core.queue import FileQueue
+        from repro.core.routing import RoutingPlan
+        from repro.core.streaming import Collector, Gatherer, Pusher
+        from repro.core.transform import make_transform
+
+        self.name = f"master-{shard_id}"
+        self.hooks = FaultHooks(self.name)
+        self.cfg = cfg
+        self.plan = RoutingPlan(cfg["num_master"], cfg["num_slave"],
+                                cfg["num_partitions"])
+        self.optimizer = _build_optimizer(cfg)
+        self.groups = {g: int(d) for g, d in cfg["groups"].items()}
+        self.shard = MasterShard(shard_id, self.groups, self.optimizer)
+        self.collector = Collector()
+        self.shard.collector = self.collector
+        self.gatherer = Gatherer(cfg.get("gather_mode", "realtime"))
+        self.queue = FileQueue(os.path.join(root, "queue"))
+        self.transform = make_transform(cfg.get("codec", "identity"),
+                                        self.optimizer)
+        self.pusher = Pusher(self.shard, self.queue, self.plan,
+                             self.transform)
+        # delta-checkpoint marks: per-group mutation clock / dense version
+        # at the previous part write (lost on respawn — the supervisor
+        # forces the next checkpoint full after any recovery)
+        self._marks: dict[str, int] = {}
+        self._dense_marks: dict[str, int] = {}
+
+    # -- RPC methods -----------------------------------------------------
+    def pull(self, group: str, ids: np.ndarray) -> np.ndarray:
+        return self.shard.pull(group, np.asarray(ids, np.int64))
+
+    def apply(self, group: str, ids: np.ndarray, grads: np.ndarray,
+              step: int) -> int:
+        uniq = self.shard.apply_batch(group, ids, grads, step=step)
+        self.hooks.check("mid_train", step)
+        return int(len(uniq))
+
+    def flush(self, step: int, now: float) -> int:
+        self.gatherer.offer(self.collector.drain())
+        if not self.gatherer.ready(now):
+            return 0
+        gathered = self.gatherer.flush(now)
+        kill = self.hooks.pending("mid_flush", step, kind="kill")
+        if kill is not None:
+            # die with the flush half-pushed: produce roughly half of
+            # every id set (some partitions get records, some don't),
+            # then fire the kill — the torn-flush crash window
+            partial = {k: ids[: max(1, len(ids) // 2)]
+                       for k, ids in gathered.items() if len(ids)}
+            self.pusher.push(partial, now=self.hooks.now(now))
+            self.hooks.check("mid_flush", step)       # no return
+        self.hooks.check("mid_flush", step)           # delay/skew
+        return self.pusher.push(gathered, now=self.hooks.now(now))
+
+    def checkpoint_part(self, version: int, kind: str, path: str,
+                        step: int) -> dict:
+        if kind == "full" or not self._marks:
+            kind = "full"
+            snap = self.shard.snapshot()
+        else:
+            snap = self.shard.delta_snapshot(self._marks, self._dense_marks)
+        part = {"snap": snap, "kind": kind,
+                "pusher_seqs": self.pusher.seqs()}
+        tmp = path + ".tmp"
+        import pickle
+        with open(tmp, "wb") as f:
+            pickle.dump(part, f, protocol=4)
+        # the torn-checkpoint window: part written but not yet published;
+        # a kill here leaves only the .tmp — the supervisor never commits
+        # the manifest and the previous chain stays authoritative
+        self.hooks.check("mid_ckpt", step)
+        os.replace(tmp, path)
+        self._marks = {g: t["version"]
+                       for g, t in snap["tables"].items()}
+        self._dense_marks = dict(self.shard.dense.versions)
+        for g, t in self.shard.tables.items():
+            t.trim_evict_log(self._marks[g])
+        return {"kind": kind, "shard_step": self.shard.step}
+
+    def restore(self, snap: dict, pusher_seqs: dict, step: int) -> None:
+        """Install materialized (full-equivalent) state — the recovery /
+        replay entry. Clears every streaming buffer: the supervisor
+        re-drives the steps after the cut, regenerating the events."""
+        self.shard.clear()
+        self.shard.load_snapshot(snap)
+        self.pusher.restore_seqs(pusher_seqs)
+        self.collector.drain()
+        self.gatherer._pending.clear()
+        self.gatherer._pending_count = 0
+        self._marks = {}
+        self._dense_marks = {}
+        self.shard.step = step
+
+    def table_state(self, group: str) -> dict:
+        return _sorted_table_state(self.shard.tables[group])
+
+    def metrics(self) -> dict:
+        return {"step": self.shard.step,
+                "pushed_records": self.pusher.pushed_records,
+                "pushed_bytes": self.pusher.pushed_bytes,
+                "rows": {g: len(t) for g, t in self.shard.tables.items()}}
+
+
+class SlaveWorker:
+    """One slave PS replica + its Scatter consumer."""
+
+    def __init__(self, shard_id: int, replica: int, root: str, cfg: dict):
+        from repro.core.ps import SlaveShard
+        from repro.core.queue import FileQueue
+        from repro.core.routing import RoutingPlan
+        from repro.core.streaming import Scatter
+
+        self.name = f"slave-{shard_id}.{replica}"
+        self.hooks = FaultHooks(self.name)
+        self.plan = RoutingPlan(cfg["num_master"], cfg["num_slave"],
+                                cfg["num_partitions"])
+        self.groups = {g: int(d) for g, d in cfg["groups"].items()}
+        self.shard = SlaveShard(shard_id, self.groups)
+        self.queue = FileQueue(os.path.join(root, "queue"))
+        self.scatter = Scatter(self.shard, self.queue, self.plan)
+        self.scatter.pre_apply = self._pre_apply
+        self._cur_step = -1
+
+    def _pre_apply(self, recs) -> None:
+        # offsets already advanced in the consumer's memory, nothing
+        # applied yet — a kill here forces redelivery after respawn
+        self.hooks.check("pre_apply", self._cur_step)
+
+    # -- RPC methods -----------------------------------------------------
+    def poll(self, step: int, max_records=None) -> int:
+        self._cur_step = step
+        if self.hooks.pending("pre_apply", step, kind="drop"):
+            self.hooks.check("pre_apply", step)   # dropped fetch response
+            return 0
+        return self.scatter.poll(max_records)
+
+    def lookup(self, group: str, ids: np.ndarray) -> np.ndarray:
+        return self.shard.lookup(group, np.asarray(ids, np.int64))
+
+    def offsets(self) -> dict:
+        return self.scatter.offsets()
+
+    def seek(self, offsets: dict) -> None:
+        self.scatter.seek({int(k): int(v) for k, v in offsets.items()})
+
+    def load_group(self, group: str, ids: np.ndarray,
+                   values: np.ndarray) -> None:
+        self.shard.tables[group].scatter(np.asarray(ids, np.int64), values)
+
+    def clear(self) -> None:
+        """Hot-switch prelude: drop serve state + LWW seq memory so a
+        checkpoint reload + offset seek replays into a clean table."""
+        from repro.core.ps import SparseTable
+        for g, dim in self.groups.items():
+            self.shard.tables[g] = SparseTable(dim)
+        self.shard._applied_seq = {}
+        self.shard.dense = {}
+        self.shard.dense_versions = {}
+
+    def table_state(self, group: str) -> dict:
+        return _sorted_table_state(self.shard.tables[group])
+
+    def metrics(self) -> dict:
+        return {"applied": self.shard.applied_records,
+                "skipped": self.shard.skipped_records,
+                "lag": self.scatter.lag(),
+                "rows": {g: len(t) for g, t in self.shard.tables.items()}}
+
+
+def _dispatch(worker, method: str, kwargs: dict):
+    if method == "ping":
+        return worker.name
+    if method == "arm":
+        worker.hooks.arm([FaultEvent(**e) for e in kwargs["events"]])
+        return len(worker.hooks.events)
+    fn = getattr(worker, method, None)
+    if fn is None or method.startswith("_"):
+        raise AttributeError(f"no RPC method {method!r}")
+    return fn(**kwargs)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--role", choices=("master", "slave"), required=True)
+    ap.add_argument("--shard", type=int, required=True)
+    ap.add_argument("--replica", type=int, default=-1)
+    ap.add_argument("--root", required=True)
+    ap.add_argument("--socket", required=True)
+    args = ap.parse_args(argv)
+
+    cfg = _load_runtime_cfg(args.root)
+    if args.role == "master":
+        worker = MasterWorker(args.shard, args.root, cfg)
+    else:
+        worker = SlaveWorker(args.shard, args.replica, args.root, cfg)
+    print(f"[{worker.name}] pid={os.getpid()} ready", flush=True)
+    server = RpcServer(args.socket,
+                       lambda m, kw: _dispatch(worker, m, kw))
+    server.serve_forever()
+    print(f"[{worker.name}] shutdown", flush=True)
+    sys.exit(0)
+
+
+if __name__ == "__main__":
+    main()

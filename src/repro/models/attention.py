@@ -140,8 +140,8 @@ def _context_parallel_constraint(q, k, v):
     score einsum contract a sharded dim and all-reduce full fp32 score
     tensors (measured ~86 GB/layer on qwen1.5-4b train_4k)."""
     from jax.sharding import PartitionSpec as P
-    mesh = jax.sharding.get_abstract_mesh()
-    if "model" not in mesh.axis_names:
+    from repro.models.common import mesh_axis_names
+    if "model" not in mesh_axis_names():
         return q, k, v           # mesh-less (unit tests): constraint inert
     U = P.UNCONSTRAINED
     wsc = jax.lax.with_sharding_constraint

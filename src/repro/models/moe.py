@@ -33,11 +33,12 @@ def _maybe_wsc(x: jax.Array, *axes) -> jax.Array:
     identity in mesh-less unit tests. XLA's SPMD propagation replicates the
     grouped capacity buffers without these hints (measured: 28 GB fp32
     all-reduces of expert intermediates per dbrx layer)."""
-    mesh = jax.sharding.get_abstract_mesh()
-    if not mesh.axis_names:
+    from repro.models.common import mesh_axis_names
+    names = mesh_axis_names()
+    if not names:
         return x
     spec = jax.sharding.PartitionSpec(
-        *[a if (a is None or a in mesh.axis_names) else None for a in axes])
+        *[a if (a is None or a in names) else None for a in axes])
     return jax.lax.with_sharding_constraint(x, spec)
 
 

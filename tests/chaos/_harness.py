@@ -1,0 +1,81 @@
+"""Shared helpers for the chaos-test suite: one place that fixes the
+cluster shape and step budget so every test (and the baseline fixture)
+runs the exact same trajectory."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.launch.runtime import ClusterRuntime, RuntimeConfig
+
+STEPS = 14
+MASTERS = ["master-0", "master-1"]
+SLAVES = ["slave-0.0", "slave-1.0"]
+
+# one shape for the whole suite — the baseline run is only comparable to
+# a chaos run that used the identical config
+CLUSTER_KW = dict(num_master=2, num_slave=2, num_replicas=1,
+                  num_partitions=4, ckpt_every=4)
+
+
+def make_runtime(root, plan=None, **overrides) -> ClusterRuntime:
+    kw = dict(CLUSTER_KW)
+    kw.update(overrides)
+    return ClusterRuntime(RuntimeConfig(root=str(root), **kw), plan)
+
+
+def run_cluster(root, plan=None, steps=STEPS, **overrides):
+    """Run a cluster to ``steps`` and return its end-state summary."""
+    rt = make_runtime(root, plan, **overrides)
+    try:
+        rt.start()
+        rt.run_to(steps)
+        return {"recoveries": rt.recoveries,
+                "masters": rt.master_state(),
+                "slaves": rt.slave_state(),
+                "downgrades": list(rt.downgrader.downgrades)}
+    finally:
+        rt.shutdown()
+
+
+def tables_equal(a: dict, b: dict) -> bool:
+    """Bit-equality of two canonical table dumps (ids, w, slots)."""
+    if not np.array_equal(a["ids"], b["ids"]):
+        return False
+    if not np.array_equal(a["w"], b["w"]):
+        return False
+    if sorted(a["slots"]) != sorted(b["slots"]):
+        return False
+    return all(np.array_equal(a["slots"][k], b["slots"][k])
+               for k in a["slots"])
+
+
+def assert_states_equal(got: dict, want: dict, what: str) -> None:
+    assert sorted(got) == sorted(want), \
+        f"{what}: shard sets differ: {sorted(got)} vs {sorted(want)}"
+    for name in want:
+        assert tables_equal(got[name], want[name]), \
+            f"{what}: state of {name} is not bit-equal"
+
+
+def master_serve_w(masters: dict) -> dict:
+    """id -> serve weight across all master shards (FTRL stores the
+    derived serve weight in w, so this is what slaves must converge to)."""
+    out = {}
+    for st in masters.values():
+        for i, wid in enumerate(st["ids"]):
+            out[int(wid)] = st["w"][i]
+    return out
+
+
+def assert_slaves_consistent(masters: dict, slaves: dict) -> None:
+    """Every slave row must hold exactly the master's current serve
+    weight for that id (the symmetric-fusion consistency invariant once
+    the stream is drained)."""
+    want = master_serve_w(masters)
+    for name, st in slaves.items():
+        assert len(st["ids"]), f"{name} is empty"
+        for i, wid in enumerate(st["ids"]):
+            assert int(wid) in want, f"{name} serves unknown id {wid}"
+            assert np.array_equal(st["w"][i], want[int(wid)]), \
+                f"{name} serves stale value for id {wid}"

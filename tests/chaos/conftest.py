@@ -1,0 +1,12 @@
+import pytest
+
+from _harness import STEPS, run_cluster
+
+
+@pytest.fixture(scope="session")
+def fault_free_run(tmp_path_factory):
+    """The no-fault reference trajectory every chaos run is compared
+    against — run once per session (cluster startup pays the jax import
+    per worker process)."""
+    root = tmp_path_factory.mktemp("fault-free")
+    return run_cluster(root, plan=None, steps=STEPS)

@@ -1,0 +1,144 @@
+"""Chaos-harness acceptance tests: deterministic FaultPlans, SIGKILL
+recovery through the checkpoint chain + scatter seek, trajectory
+preservation (bit-equal state vs. the fault-free run), evaluator-driven
+domino downgrade, and elastic replica add/remove.
+
+Every multi-process test carries the ``chaos`` marker: opt in with
+``pytest -m chaos --chaos`` (per-test wall-clock cap via
+``--chaos-timeout``). A failing CI seed reproduces locally with
+``pytest tests/chaos --chaos --chaos-seed <seed>``.
+"""
+
+import numpy as np
+import pytest
+
+from _harness import (MASTERS, SLAVES, STEPS, assert_slaves_consistent,
+                      assert_states_equal, make_runtime, run_cluster)
+
+from repro.launch.chaos import KILL_POINTS, FaultEvent, FaultPlan
+
+
+def test_fault_plan_deterministic():
+    """Same (seed, shape) -> identical plan; JSON round-trips; events sit
+    inside the driveable step range. Runs in-process (no cluster)."""
+    for seed in (7, 11, 23):
+        a = FaultPlan.generate(seed, steps=STEPS, masters=MASTERS,
+                               slaves=SLAVES)
+        b = FaultPlan.generate(seed, steps=STEPS, masters=MASTERS,
+                               slaves=SLAVES)
+        assert a.events == b.events
+        assert FaultPlan.from_json(a.to_json()).events == a.events
+        assert len(a.kills()) == 2
+        for e in a.events:
+            assert e.point in KILL_POINTS
+            assert 1 <= e.step <= STEPS - 2
+    assert FaultPlan.generate(7, steps=STEPS, masters=MASTERS,
+                              slaves=SLAVES).events != \
+        FaultPlan.generate(8, steps=STEPS, masters=MASTERS,
+                           slaves=SLAVES).events
+
+
+@pytest.mark.chaos
+def test_slave_sigkill_recovers_and_serves(tmp_path):
+    """A slave replica SIGKILLed mid-stream comes back via checkpoint
+    bootstrap + scatter seek and converges to the master's serve state."""
+    plan = FaultPlan(seed=0, events=[
+        FaultEvent("slave-0.0", "pre_apply", 5, "kill")])
+    out = run_cluster(tmp_path, plan)
+    assert out["recoveries"] == 1
+    assert_slaves_consistent(out["masters"], out["slaves"])
+
+
+@pytest.mark.chaos
+def test_master_sigkill_mid_train_recovers(tmp_path, fault_free_run):
+    """A master SIGKILLed right after mutating optimizer state restores
+    from the chain and replays to the exact fault-free trajectory."""
+    plan = FaultPlan(seed=0, events=[
+        FaultEvent("master-1", "mid_train", 6, "kill")])
+    out = run_cluster(tmp_path, plan)
+    assert out["recoveries"] == 1
+    assert_states_equal(out["masters"], fault_free_run["masters"],
+                        "masters after mid_train kill")
+    assert_states_equal(out["slaves"], fault_free_run["slaves"],
+                        "slaves after mid_train kill")
+
+
+@pytest.mark.chaos
+def test_recovery_is_trajectory_preserving(tmp_path, fault_free_run,
+                                           chaos_seed):
+    """Property: for generated FaultPlans (>= 3 seeds), N injected kills
+    produce bit-equal master AND slave table state to the fault-free run
+    once the cluster catches up — recovery neither loses nor double-
+    applies a single update."""
+    for seed in (chaos_seed, chaos_seed + 4, chaos_seed + 16):
+        plan = FaultPlan.generate(seed, steps=STEPS, masters=MASTERS,
+                                  slaves=SLAVES)
+        out = run_cluster(tmp_path / f"seed{seed}", plan)
+        assert out["recoveries"] >= 1, \
+            f"seed {seed}: plan had kills but nothing died"
+        assert_states_equal(out["masters"], fault_free_run["masters"],
+                            f"masters (seed {seed})")
+        assert_states_equal(out["slaves"], fault_free_run["slaves"],
+                            f"slaves (seed {seed})")
+
+
+@pytest.mark.chaos
+def test_domino_downgrade_fires_and_unfires(tmp_path):
+    """The streaming evaluator trips the smoothed trigger early (the
+    untrained model's logloss sits at ~0.69), the downgrade executes a
+    hot switch to the stable version, and the fired state decays once the
+    cooldown window closes without a re-trip (the model has learned past
+    the threshold by then)."""
+    rt = make_runtime(
+        tmp_path,
+        # learn fast enough that smoothed logloss falls below the
+        # threshold inside the run: weak l1, hot alpha
+        optimizer_kwargs={"alpha": 0.5, "l1": 0.01},
+        # the untrained model sits at ~0.69 and drops below 0.64 for good
+        # by step 12; cooldown 8 blocks refires until the model is past
+        # the threshold, so the trigger trips exactly once. min_points 5:
+        # the first possible fire lands after checkpoint v2 exists, so
+        # the bootstrap version is never the only candidate.
+        trigger_threshold=0.64, trigger_window=3, trigger_min_points=5,
+        downgrade_cooldown=8.0)
+    try:
+        rt.start()
+        rt.run_to(30)
+        fired = rt.downgrader.downgrades
+        assert len(fired) == 1, f"expected exactly one downgrade: {fired}"
+        t0, v = fired[0]
+        assert v in rt.store.versions()
+        # fired: active inside the cooldown window...
+        assert rt.downgrader.active(t0 + rt.downgrader.cooldown / 2)
+        # ...un-fired: inactive now, and the trigger never re-tripped
+        assert not rt.downgrader.active(float(rt.step))
+        assert rt.evaluator.smoothed("logloss", 3) < 0.64
+        # post-switch, replayed stream re-converged serving to training
+        assert_slaves_consistent(rt.master_state(), rt.slave_state())
+    finally:
+        rt.shutdown()
+
+
+@pytest.mark.chaos
+def test_elastic_add_remove_replica(tmp_path):
+    """A replica added at runtime bootstraps from the latest committed
+    checkpoint, catches up from the stream, and serves the same bits as
+    the incumbent replica of its shard; removing it drains cleanly."""
+    rt = make_runtime(tmp_path)
+    try:
+        rt.start()
+        rt.run_to(6)
+        name = rt.add_replica(0)
+        assert name == "slave-0.1"
+        rt.run_to(10)
+        slaves = rt.slave_state()
+        assert np.array_equal(slaves["slave-0.0"]["ids"],
+                              slaves["slave-0.1"]["ids"])
+        assert np.array_equal(slaves["slave-0.0"]["w"],
+                              slaves["slave-0.1"]["w"])
+        rt.remove_replica(name)
+        assert name not in rt.clients and name not in rt.procs
+        rt.run_to(12)          # cluster keeps running without the replica
+        assert_slaves_consistent(rt.master_state(), rt.slave_state())
+    finally:
+        rt.shutdown()

@@ -23,9 +23,6 @@ def _tiny_shape(kind):
     return InputShape(f"tiny_{kind}", 64, 2, kind)
 
 
-@pytest.mark.xfail(
-    reason="pre-existing seed failure (train-step lowering on local mesh); "
-           "tracked in ROADMAP — not a regression gate", strict=False)
 @pytest.mark.parametrize("arch", ["qwen2-1.5b", "mamba2-1.3b",
                                   "granite-moe-3b-a800m"])
 def test_lower_train_step_local_mesh(arch):
@@ -38,7 +35,10 @@ def test_lower_train_step_local_mesh(arch):
     lowered = jax.jit(make_train_step(cfg, jit=False)).lower(
         state, specs["batch"])
     compiled = lowered.compile()
-    assert compiled.cost_analysis()["flops"] > 0
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):     # jax 0.4.x: one dict per device
+        ca = ca[0]
+    assert ca["flops"] > 0
 
 
 @pytest.mark.parametrize("arch", ["qwen2-1.5b", "gemma3-4b"])

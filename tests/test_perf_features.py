@@ -41,9 +41,6 @@ def _moe_params(cfg, key):
     }
 
 
-@pytest.mark.xfail(
-    reason="pre-existing seed failure (grouped MoE dispatch mismatch); "
-           "tracked in ROADMAP — not a regression gate", strict=False)
 @pytest.mark.parametrize("groups", [2, 4])
 def test_grouped_dispatch_matches_flat_with_ample_capacity(groups):
     cfg = dataclasses.replace(reduced(get_config("dbrx-132b")),
@@ -67,9 +64,6 @@ def test_sorted_positions_first_come_first_served():
     np.testing.assert_array_equal(np.asarray(pos), [0, 0, 1, 2, 0, 1, 3])
 
 
-@pytest.mark.xfail(
-    reason="pre-existing seed failure (cp-attention not a no-op off-mesh); "
-           "tracked in ROADMAP — not a regression gate", strict=False)
 def test_context_parallel_flag_is_noop_without_mesh():
     """cp-attention adds constraints only; math unchanged (no mesh here,
     UNCONSTRAINED specs are inert on a single device)."""
