@@ -1,0 +1,139 @@
+"""End-to-end SLO benchmark: concurrent serve+train load through one
+shared PS (the ROADMAP "production-shape SLO" harness, built on
+``repro.launch.slo``).
+
+Legs:
+  * overload_sweep — the acceptance leg: seeded Zipf predict traffic +
+    feedback-joined training batches drive two scenarios (FM store + LR
+    head) concurrently; offered load sweeps 0.5x/1x/2x/4x of the serve
+    budget with admission control ON. Reports p50/p99 predict latency,
+    event→deployed staleness (push→scatter→cache-visible), throughput,
+    and shed counters — graceful degradation means p99 stays bounded
+    while sheds absorb the overload.
+  * no_admission_2x — the same 2x overload with admission OFF: the queue
+    grows without bound tick over tick, so tail latency scales with run
+    length instead of the depth bound. The p99 ratio vs the admitted run
+    is the benefit number.
+  * procs (optional, ``--procs``) — the multi-process leg: the PR 7
+    process-per-shard runtime driven for ``--proc-steps`` steps,
+    reporting per-worker applied counts and the new scatter staleness
+    percentiles from worker metrics (simulated seconds: now == step).
+
+Run:  PYTHONPATH=src python benchmarks/e2e_slo.py [--smoke] [--procs]
+Emits BENCH_e2e.json (or --out PATH).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import tempfile
+from dataclasses import asdict
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rows", type=int, default=1 << 20,
+                    help="pre-seeded serve-table id space (>=1M full run)")
+    ap.add_argument("--budget", type=int, default=2048,
+                    help="serve budget (examples) per scenario per tick")
+    ap.add_argument("--req-batch", type=int, default=128)
+    ap.add_argument("--train-events", type=int, default=512)
+    ap.add_argument("--ticks", type=int, default=16,
+                    help="measured ticks per sweep point")
+    ap.add_argument("--warmup", type=int, default=4)
+    ap.add_argument("--procs", action="store_true",
+                    help="also run the multi-process runtime leg")
+    ap.add_argument("--proc-steps", type=int, default=12)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default="BENCH_e2e.json")
+    args = ap.parse_args()
+    multipliers = (0.5, 1.0, 2.0, 4.0)
+    if args.smoke:
+        args.rows = min(args.rows, 1 << 16)
+        args.budget = min(args.budget, 512)
+        args.req_batch = min(args.req_batch, 64)
+        args.train_events = min(args.train_events, 128)
+        args.ticks = min(args.ticks, 6)
+        args.warmup = min(args.warmup, 2)
+        multipliers = (0.5, 2.0)
+
+    from repro.launch.slo import SLOConfig, SLOHarness
+
+    def make_cfg(**kw) -> SLOConfig:
+        return SLOConfig(rows=args.rows, budget=args.budget,
+                         req_batch=args.req_batch,
+                         train_events=args.train_events,
+                         warmup_ticks=args.warmup,
+                         measure_ticks=args.ticks, **kw)
+
+    results: dict[str, dict] = {}
+
+    # -- overload sweep, admission ON (acceptance leg) ----------------------
+    # depth bound = one tick's budget of queueing per scenario; overload
+    # beyond it must shed, not queue
+    admitted = SLOHarness(make_cfg(max_pending=2 * args.budget))
+    results["overload_sweep"] = {
+        f"load_{m}x": admitted.run_point(m) for m in multipliers}
+    results["train_side"] = {
+        "train_batches": admitted.train_batches,
+        "train_examples": admitted.metrics()["train_examples"],
+    }
+
+    # -- same overload, admission OFF (the collapse this PR prevents) ------
+    raw = SLOHarness(make_cfg(max_pending=None))
+    results["no_admission_2x"] = raw.run_point(2.0)
+
+    adm_2x = results["overload_sweep"]["load_2.0x"]
+    results["admission_benefit"] = {
+        "p99_with_admission_s": adm_2x["latency_s"]["p99"],
+        "p99_without_admission_s":
+            results["no_admission_2x"]["latency_s"]["p99"],
+        "p99_ratio": results["no_admission_2x"]["latency_s"]["p99"]
+        / max(adm_2x["latency_s"]["p99"], 1e-9),
+        "queue_depth_with": adm_2x["pending_examples"],
+        "queue_depth_without":
+            results["no_admission_2x"]["pending_examples"],
+    }
+
+    # -- optional multi-process leg -----------------------------------------
+    if args.procs:
+        from repro.launch.runtime import ClusterRuntime, RuntimeConfig
+        with tempfile.TemporaryDirectory() as root:
+            rcfg = RuntimeConfig(root=root, num_master=2, num_slave=2,
+                                 num_replicas=1, vocab=1 << 12,
+                                 batch_size=64)
+            with ClusterRuntime(rcfg) as rt:
+                rt.run_to(args.proc_steps)
+                results["procs"] = {
+                    "steps": args.proc_steps,
+                    "slaves": {n: rt.clients[n].call("metrics")
+                               for n in rt.slave_names()},
+                }
+
+    out = {
+        "config": {**{k: getattr(args, k) for k in
+                      ("rows", "budget", "req_batch", "train_events",
+                       "ticks", "warmup", "smoke")},
+                   "multipliers": list(multipliers),
+                   "harness": asdict(make_cfg(
+                       max_pending=2 * args.budget))},
+        "results": results,
+    }
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+    print(json.dumps(out, indent=2))
+    lo = results["overload_sweep"][f"load_{multipliers[0]}x"]
+    hi = results["overload_sweep"][f"load_{multipliers[-1]}x"]
+    ben = results["admission_benefit"]
+    print(f"\nSLO: p50 {lo['latency_s']['p50']*1e3:.2f}ms / "
+          f"p99 {lo['latency_s']['p99']*1e3:.2f}ms at "
+          f"{multipliers[0]}x; p99 {hi['latency_s']['p99']*1e3:.2f}ms at "
+          f"{multipliers[-1]}x overload "
+          f"(shed {hi['admission']['shed_examples']} ex); "
+          f"staleness p99 {lo['staleness_s']['p99']*1e3:.2f}ms; "
+          f"no-admission 2x p99 is {ben['p99_ratio']:.1f}x worse")
+
+
+if __name__ == "__main__":
+    main()

@@ -72,6 +72,12 @@ class ClusterConfig:
     #                                       laggier replicas are skipped
     serve_cache_rows: int = 1 << 20       # serve-cache arena bound per scenario
     serve_buckets: tuple = DEFAULT_BUCKETS  # predict micro-batch bucket sizes
+    serve_max_pending: Optional[int] = None  # admission depth bound in pending
+    #                                       predict examples; over it the
+    #                                       OLDEST tickets shed (serving twin
+    #                                       of train_max_sync_lag)
+    serve_deadline: Optional[float] = None  # seconds from admit to execution;
+    #                                       expired tickets shed at flush
     # training plane (src/repro/training/)
     train_buckets: tuple = TRAIN_BUCKETS  # train micro-batch bucket sizes
     train_max_sync_lag: Optional[int] = None  # backpressure bound: pipelines
@@ -85,10 +91,13 @@ class ClusterConfig:
 
 class WeiPSCluster:
     def __init__(self, model_cfg: CTRConfig,
-                 cluster_cfg: Optional[ClusterConfig] = None):
+                 cluster_cfg: Optional[ClusterConfig] = None, *,
+                 clock=None):
         self.cfg = model_cfg
         self.ccfg = cluster_cfg or ClusterConfig()
         c = self.ccfg
+        self.clock = clock      # injectable serve-latency clock (tests);
+        #                         None = wall clock (time.perf_counter)
         self.plan = RoutingPlan(c.num_master, c.num_slave, c.num_partitions)
         self.groups = ctr_model.groups_for(model_cfg)
         self.optimizer = _make_optimizer(model_cfg)
@@ -140,11 +149,16 @@ class WeiPSCluster:
         # shared with the training-plane pull (see _pull_rows) — the two
         # planes run the same routing/gather code, which is the symmetry
         # the paper names.
+        admission = None
+        if c.serve_max_pending is not None or c.serve_deadline is not None:
+            from repro.serving.scheduler import AdmissionConfig
+            admission = AdmissionConfig(max_pending=c.serve_max_pending,
+                                        deadline=c.serve_deadline)
         self.serving = ServingPlane(
             self.plan, self.replica_sets, self.groups,
             max_replica_lag=c.serve_max_lag,
             cache_rows=c.serve_cache_rows, buckets=c.serve_buckets,
-            ps_backend=c.ps_backend)
+            ps_backend=c.ps_backend, admission=admission, clock=clock)
         self.add_scenario(model_cfg)          # default scenario
         for rs in self.replica_sets:
             for shard in rs.replicas:
@@ -281,7 +295,7 @@ class WeiPSCluster:
         if scatter:
             for sc in self.scatters:
                 if sc.shard.alive:
-                    sc.poll()
+                    sc.poll(now=now)
         return n
 
     def expire_features(self, now: float) -> int:
@@ -492,11 +506,17 @@ class WeiPSCluster:
         self.scheduler.mark_dead("slave", shard_id, replica_idx)
 
     def sync_metrics(self, now: float) -> dict:
+        from repro.core.monitor import PercentileRing
         lag = max((now - sc.last_record_time for sc in self.scatters
                    if sc.shard.alive), default=0.0)
         serving = self.serving.metrics()
         return {
             "sync_lag_seconds": lag,
+            # event→deployed staleness (push→scatter→cache-visible) across
+            # every live scatter consumer — the harness's headline SLO
+            "staleness": PercentileRing.merged_percentiles(
+                [sc.staleness for sc in self.scatters if sc.shard.alive],
+                (50, 99)),
             "sync_lag_records": self._sync_lag_records(),
             "pushed_bytes": sum(p.pushed_bytes for p in self.pushers),
             "queue_bytes": self.queue.produced_bytes,

@@ -281,6 +281,14 @@ class Scatter:
             shard.shard_id), offsets)
         self.applied = 0
         self.last_record_time = 0.0
+        # event→deployed staleness per applied record: the pusher stamps
+        # meta["t"] at push time, the apply happens here, and the apply
+        # runs SlaveShard.on_apply (serve-cache invalidation) inline — so
+        # now - meta["t"] at this point IS push→scatter→cache-visible,
+        # the SLO the ROADMAP's harness measures. Deferred import keeps
+        # streaming.py free of a monitor dependency at module load.
+        from repro.core.monitor import PercentileRing
+        self.staleness = PercentileRing(1 << 12)
         # called with the polled records after the consumer advanced but
         # BEFORE any of them is applied — the crash window between fetch
         # and apply. The chaos harness kills here; a process dying at this
@@ -288,7 +296,8 @@ class Scatter:
         # and full-value upserts make the redelivery idempotent.
         self.pre_apply = None
 
-    def poll(self, max_records: Optional[int] = None) -> int:
+    def poll(self, max_records: Optional[int] = None, *,
+             now: Optional[float] = None) -> int:
         recs = self.consumer.poll(max_records)
         if not recs:
             return 0
@@ -319,6 +328,9 @@ class Scatter:
         applied = self.shard.apply_batch(recs)
         if applied:
             self.last_record_time = applied[-1].meta.get("t", 0.0)
+            if now is not None:
+                self.staleness.record(
+                    [now - r.meta.get("t", now) for r in applied])
         self.applied += len(applied)
         return len(applied)
 

@@ -43,6 +43,12 @@ def _id_hashmap(capacity: int):
     return IdHashMap(capacity)
 
 
+def _percentile_ring(size: int):
+    # deferred for the same circularity reason as _id_hashmap
+    from repro.core.monitor import PercentileRing
+    return PercentileRing(size)
+
+
 @dataclass(frozen=True)
 class ExposureEvent:
     t: float
@@ -164,8 +170,9 @@ class SampleJoiner:
         self.emitted = 0
         self.fast_emits = 0            # emit-on-feedback fast-path samples
         self.negatives_dropped = 0     # shed by neg_sample_rate
-        self._delays = np.zeros(_DELAY_RING, np.float32)
-        self._delay_n = 0              # total delays ever recorded
+        # recent join delays for percentile metrics — the shared ring the
+        # serving scheduler and sync staleness meter also use
+        self._delays = _percentile_ring(_DELAY_RING)
 
     # ------------------------------------------------------------------
     # storage
@@ -412,17 +419,7 @@ class SampleJoiner:
             self._compact_rows()
 
     def _record_delays(self, delays: np.ndarray) -> None:
-        n = len(delays)
-        if n >= _DELAY_RING:                   # whole ring replaced
-            self._delays[:] = delays[n - _DELAY_RING:]
-            self._delay_n += n
-            return
-        at = self._delay_n % _DELAY_RING
-        take = min(n, _DELAY_RING - at)
-        self._delays[at:at + take] = delays[:take]
-        if take < n:                           # wrap
-            self._delays[:n - take] = delays[take:]
-        self._delay_n += n
+        self._delays.record(delays)
 
     # ------------------------------------------------------------------
     # per-event API (seed-compatible wrappers)
@@ -452,11 +449,7 @@ class SampleJoiner:
         return len(self._map)
 
     def join_delay_percentiles(self, qs=(50, 99)) -> dict[str, float]:
-        n = min(self._delay_n, _DELAY_RING)
-        if n == 0:
-            return {f"p{q}": 0.0 for q in qs}
-        vals = np.percentile(self._delays[:n], qs)
-        return {f"p{q}": float(v) for q, v in zip(qs, vals)}
+        return self._delays.percentiles(qs)
 
     def metrics(self) -> dict:
         return {

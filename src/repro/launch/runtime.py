@@ -348,7 +348,7 @@ class ClusterRuntime:
             pushed += self.clients[name].call("flush", step=step, now=now)
         applied = 0
         for name in self.slave_names():
-            applied += self.clients[name].call("poll", step=step)
+            applied += self.clients[name].call("poll", step=step, now=now)
         self.step = step + 1
         if not replaying and self.step % c.ckpt_every == 0:
             self.checkpoint()

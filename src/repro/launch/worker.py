@@ -182,12 +182,12 @@ class SlaveWorker:
         self.hooks.check("pre_apply", self._cur_step)
 
     # -- RPC methods -----------------------------------------------------
-    def poll(self, step: int, max_records=None) -> int:
+    def poll(self, step: int, max_records=None, now=None) -> int:
         self._cur_step = step
         if self.hooks.pending("pre_apply", step, kind="drop"):
             self.hooks.check("pre_apply", step)   # dropped fetch response
             return 0
-        return self.scatter.poll(max_records)
+        return self.scatter.poll(max_records, now=now)
 
     def lookup(self, group: str, ids: np.ndarray) -> np.ndarray:
         return self.shard.lookup(group, np.asarray(ids, np.int64))
@@ -219,6 +219,7 @@ class SlaveWorker:
         return {"applied": self.shard.applied_records,
                 "skipped": self.shard.skipped_records,
                 "lag": self.scatter.lag(),
+                "staleness": self.scatter.staleness.percentiles((50, 99)),
                 "rows": {g: len(t) for g, t in self.shard.tables.items()}}
 
 

@@ -45,6 +45,10 @@ class ServeCache:
         self.misses = 0
         self.invalidated = 0
         self.trims = 0
+        # counter snapshot at the last window_stats() read — windowed
+        # deltas without ever resetting the lifetime counters
+        self._window_mark = {"hits": 0, "misses": 0, "invalidated": 0,
+                             "trims": 0}
 
     def __len__(self) -> int:
         return len(self.table)
@@ -145,6 +149,20 @@ class ServeCache:
                 "hit_rate": self.hit_rate, "invalidated": self.invalidated,
                 "trims": self.trims}
 
+    def window_stats(self) -> dict:
+        """Counter deltas since the previous ``window_stats`` call, then
+        start a new window. Lifetime counters (``stats``) are untouched —
+        the SLO harness reads per-measurement-window hit rates while the
+        benchmark's end-of-run totals stay intact."""
+        cur = {"hits": self.hits, "misses": self.misses,
+               "invalidated": self.invalidated, "trims": self.trims}
+        out = {k: cur[k] - self._window_mark[k] for k in cur}
+        n = out["hits"] + out["misses"]
+        out["hit_rate"] = out["hits"] / n if n else 0.0
+        out["rows"] = len(self)
+        self._window_mark = cur
+        return out
+
 
 class DenseCache:
     """Dense tensors memoized by sync version — one reshape per version,
@@ -154,6 +172,8 @@ class DenseCache:
         self._cached: dict[str, tuple[int, np.ndarray]] = {}
         self.hits = 0
         self.refreshes = 0
+        self.invalidated = 0        # clear() calls (hot switch / downgrade)
+        self._window_mark = {"hits": 0, "refreshes": 0, "invalidated": 0}
 
     def get(self, name: str, shape: tuple[int, ...], version: int,
             fetch: Callable[[], Optional[np.ndarray]]) -> np.ndarray:
@@ -174,3 +194,27 @@ class DenseCache:
 
     def clear(self) -> None:
         self._cached = {}
+        self.invalidated += 1
+
+    def stats(self) -> dict:
+        """Same shape family as ``ServeCache.stats`` so the harness can
+        surface sparse and dense cache health uniformly: a dense "miss"
+        is a refresh (version moved → re-fetch)."""
+        n = self.hits + self.refreshes
+        return {"rows": len(self._cached), "hits": self.hits,
+                "misses": self.refreshes,
+                "hit_rate": self.hits / n if n else 0.0,
+                "invalidated": self.invalidated}
+
+    def window_stats(self) -> dict:
+        cur = {"hits": self.hits, "refreshes": self.refreshes,
+               "invalidated": self.invalidated}
+        out = {"hits": cur["hits"] - self._window_mark["hits"],
+               "misses": cur["refreshes"] - self._window_mark["refreshes"],
+               "invalidated": (cur["invalidated"]
+                               - self._window_mark["invalidated"]),
+               "rows": len(self._cached)}
+        n = out["hits"] + out["misses"]
+        out["hit_rate"] = out["hits"] / n if n else 0.0
+        self._window_mark = cur
+        return out

@@ -38,7 +38,8 @@ from repro.models import ctr as ctr_model
 from repro.serving.cache import ServeCache
 from repro.serving.registry import Scenario, ScenarioRegistry
 from repro.serving.router import RowRouter
-from repro.serving.scheduler import DEFAULT_BUCKETS, PredictScheduler
+from repro.serving.scheduler import (AdmissionConfig, DEFAULT_BUCKETS,
+                                     PredictScheduler)
 
 
 class ServingPlane:
@@ -49,13 +50,19 @@ class ServingPlane:
                  max_replica_lag: Optional[int] = None,
                  cache_rows: int = 1 << 20,
                  buckets: tuple[int, ...] = DEFAULT_BUCKETS,
-                 ps_backend: str = "numpy"):
+                 ps_backend: str = "numpy",
+                 admission: Optional[AdmissionConfig] = None,
+                 clock=None):
         self.plan = plan
         self.replica_sets = replica_sets
         self.store_groups = dict(store_groups)
         self.max_replica_lag = max_replica_lag
         self.cache_rows = cache_rows
         self.buckets = tuple(buckets)
+        # shared by every scenario's scheduler: one admission policy and
+        # one (injectable) clock per serving plane
+        self.admission = admission
+        self.clock = clock or time.perf_counter
         # row engine for scenario caches: "pallas" keeps each ServeCache's
         # combined-group arena device-resident (fused probe+gather lookups
         # via the cache table's mirror); "numpy" is the CPU path
@@ -85,7 +92,8 @@ class ServingPlane:
             cache=cache)
         scn.scheduler = PredictScheduler(
             lambda ids, bucket, s=scn: self._run_bucket(s, ids, bucket),
-            buckets=self.buckets)
+            buckets=self.buckets, admission=self.admission,
+            clock=self.clock)
         return self.registry.add(scn)
 
     def scenario(self, name: Optional[str] = None) -> Scenario:
@@ -206,16 +214,22 @@ class ServingPlane:
     def submit(self, ids: np.ndarray,
                scenario: Optional[str] = None) -> int:
         """Admit a request without running it — concurrent requests queue
-        here and execute coalesced on the next ``flush``."""
+        here and execute coalesced on the next ``flush``. Under an
+        admission policy, over-depth submits shed the oldest pending
+        tickets (their flush results will be ``None``)."""
         return self.registry.get(scenario).scheduler.submit(ids)
 
-    def flush(self, scenario: Optional[str] = None) -> list[np.ndarray]:
+    def flush(self, scenario: Optional[str] = None, *,
+              budget: Optional[int] = None) -> list:
+        """Execute the pending window; ticket-ordered results, ``None``
+        for tickets the admission policy shed. With ``budget``, at most
+        that many examples execute and the rest stays queued."""
         scn = self.registry.get(scenario)
         t0 = time.perf_counter()
-        out = scn.scheduler.flush()
+        out = scn.scheduler.flush(budget=budget)
         self.predict_seconds += time.perf_counter() - t0
-        scn.requests += len(out)
-        scn.examples += sum(len(p) for p in out)
+        scn.requests += sum(1 for p in out if p is not None)
+        scn.examples += sum(len(p) for p in out if p is not None)
         return out
 
     # ------------------------------------------------------------------
@@ -240,10 +254,28 @@ class ServingPlane:
     # metrics
     # ------------------------------------------------------------------
     def metrics(self) -> dict:
+        from repro.core.monitor import PercentileRing
+        scheds = [s.scheduler for s in self.registry
+                  if s.scheduler is not None]
+        adm = {"offered_requests": 0, "offered_examples": 0,
+               "executed_requests": 0, "executed_examples": 0,
+               "shed_requests": 0, "shed_examples": 0,
+               "shed_depth_requests": 0, "shed_deadline_requests": 0}
+        for sc in scheds:
+            for k, v in sc.adm.as_dict().items():
+                adm[k] += v
         return {
             "scenarios": {s.name: s.metrics() for s in self.registry},
+            "admission": adm,
+            "latency": PercentileRing.merged_percentiles(
+                [sc.latency for sc in scheds], (50, 99)),
             "shard_pulled_rows": self.shard_pulled_rows,
             "predict_seconds": self.predict_seconds,
             "replica_lag_skips": sum(rs.lag_skips
                                      for rs in self.replica_sets),
         }
+
+    def window_metrics(self) -> dict:
+        """Per-window cache counter deltas for every scenario (advances
+        each cache's window mark)."""
+        return {s.name: s.window_metrics() for s in self.registry}

@@ -39,12 +39,20 @@ class Scenario:
     def metrics(self) -> dict:
         out = {"requests": self.requests, "examples": self.examples,
                "cache": self.cache.stats(),
+               "dense_cache": self.dense_cache.stats(),
                "dense_refreshes": self.dense_cache.refreshes}
         if self.scheduler is not None:
             s = self.scheduler.stats
             out["batches"] = s.batches
             out["padding_fraction"] = s.padding_fraction
+            out["admission"] = self.scheduler.adm.as_dict()
+            out["latency"] = self.scheduler.latency.percentiles((50, 99))
         return out
+
+    def window_metrics(self) -> dict:
+        """Per-window cache counter deltas (resets the window marks)."""
+        return {"cache": self.cache.window_stats(),
+                "dense_cache": self.dense_cache.window_stats()}
 
 
 class ScenarioRegistry:

@@ -1,0 +1,214 @@
+"""FaultPlan-driven chaos for the serve/train *planes* (the in-process
+twin of test_chaos_runtime.py, which covers the process grid): a slave
+replica dies mid-predict-stream while the admission path is actively
+shedding, and a master kill lands mid-train-flush so a tick's sync never
+completes. Recovery follows the PR 7 supervisor shape — restore ALL
+masters from the last cut, rewind, replay the gap deterministically —
+and the assertions are the trajectory-preservation invariants: the
+post-recovery predict stream and the final table state are bit-equal to
+the fault-free run.
+
+These run in-process (no worker processes), so they are tier-1 tests —
+no ``chaos`` marker needed."""
+
+from dataclasses import replace
+
+import numpy as np
+
+from repro.configs.weips_ctr import LR_FTRL
+from repro.core.cluster import ClusterConfig, WeiPSCluster
+from repro.launch.chaos import FaultEvent, FaultPlan
+
+SPACE = 1 << 10
+FIELDS = 4
+STEPS = 12
+CKPT_EVERY = 4
+BUDGET = 64                 # serve budget (examples) per step
+SERVE_REQS = 3              # requests offered per step
+REQ_N = 48                  # 3*48 offered vs 64 budget: sustained overload
+
+CFG = replace(LR_FTRL, fields=FIELDS, feature_space=SPACE)
+
+
+def make_cluster() -> WeiPSCluster:
+    return WeiPSCluster(CFG, ClusterConfig(
+        num_master=2, num_slave=2, num_replicas=2, num_partitions=4,
+        serve_max_pending=2 * BUDGET, seed=9))
+
+
+def train_batch_for(step: int, n: int = 32):
+    rng = np.random.default_rng(1000 + step)
+    ids = (rng.zipf(1.3, size=(n, FIELDS)) % SPACE).astype(np.int64)
+    return ids, (rng.random(n) < 0.5).astype(np.float32)
+
+
+def serve_batch_for(step: int, r: int) -> np.ndarray:
+    rng = np.random.default_rng(5000 + 31 * step + r)
+    return (rng.zipf(1.3, size=(REQ_N, FIELDS)) % SPACE).astype(np.int64)
+
+
+def run_planes(plan: FaultPlan = None, steps: int = STEPS):
+    """Closed-loop serve+train driver interpreting a FaultPlan against
+    one in-process cluster.
+
+    * slave targets die mid-predict-stream: requests for the kill step
+      are already admitted when the replica drops, so the flush's pulls
+      must fail over to the surviving replica of the shard;
+    * master targets die mid-train-flush: the tick trains (optimizer
+      state mutated, updates collected) but the kill lands before the
+      sync pushes, so the flush never reaches the queue. Recovery
+      restores ALL masters from the latest cut and the driver rewinds to
+      the cut and replays the gap with the same per-step batches — the
+      supervisor state machine of launch/runtime.py, in-process.
+    """
+    cl = make_cluster()
+    events = list(plan.kills()) if plan is not None else []
+    fired = set()
+    preds: dict[int, list] = {}
+    recoveries = 0
+    ckpt_step = 0
+    cl.checkpoint(0.0)
+    step = 0
+    while step < steps:
+        now = float(step + 1)
+        due = [e for e in events if e.step == step and e not in fired]
+        ids, y = train_batch_for(step)
+        cl.train_on_batch(ids, y, now=now)
+        dead_master = next((e for e in due
+                            if e.target.startswith("master-")), None)
+        if dead_master is not None:
+            fired.add(dead_master)
+            cl.kill_master(int(dead_master.target.split("-")[1]))
+            cl.cold_backup.recover_all(cl.masters)
+            recoveries += 1
+            step = ckpt_step            # rewind + deterministic replay
+            continue
+        cl.sync_tick(now)
+        for r in range(SERVE_REQS):     # admit the step's predict load
+            cl.serving.submit(serve_batch_for(step, r))
+        for e in due:                   # slave dies mid-predict-stream
+            if e.target.startswith("slave-"):
+                fired.add(e)
+                sid, rid = e.target.split("-")[1].split(".")
+                cl.kill_slave_replica(int(sid), int(rid))
+        out = cl.serving.flush(budget=BUDGET)
+        preds[step] = [p for p in out if p is not None]
+        step += 1
+        if step % CKPT_EVERY == 0:
+            cl.checkpoint(float(step))
+            ckpt_step = step
+    cl.sync_tick(float(steps + 1))      # final drain
+    return cl, preds, recoveries
+
+
+def master_tables(cl: WeiPSCluster) -> dict:
+    out = {}
+    for m in cl.masters:
+        for g, t in m.tables.items():
+            ids = np.sort(t.all_ids())
+            w, _ = t.gather(ids)
+            out[(m.shard_id, g)] = (ids, w)
+    return out
+
+
+def slave_tables(cl: WeiPSCluster) -> dict:
+    out = {}
+    for sid, rs in enumerate(cl.replica_sets):
+        for rid, shard in enumerate(rs.replicas):
+            if not shard.alive:
+                continue
+            for g, t in shard.tables.items():
+                ids = np.sort(t.all_ids())
+                out[(sid, rid, g)] = (ids, shard.lookup(g, ids))
+    return out
+
+
+def assert_tables_equal(got: dict, want: dict, what: str) -> None:
+    assert sorted(got) == sorted(want), f"{what}: key sets differ"
+    for k in want:
+        np.testing.assert_array_equal(got[k][0], want[k][0],
+                                      err_msg=f"{what}: ids of {k}")
+        np.testing.assert_array_equal(got[k][1], want[k][1],
+                                      err_msg=f"{what}: values of {k}")
+
+
+def test_slave_dies_mid_predict_stream():
+    """Replica failover mid-stream: the kill lands between admit and
+    flush, the survivor serves every executed ticket, and the WHOLE
+    predict trajectory (and shed accounting) is bit-equal to the
+    fault-free run — replicas are copies, so losing one must not change
+    a single prediction."""
+    base_cl, base_preds, _ = run_planes(None)
+    plan = FaultPlan(seed=3, events=[
+        FaultEvent("slave-0.1", "pre_apply", 5, "kill")])
+    cl, preds, _ = run_planes(plan)
+    assert sorted(preds) == sorted(base_preds)
+    for s in base_preds:
+        assert len(preds[s]) == len(base_preds[s]), f"step {s}"
+        for a, b in zip(preds[s], base_preds[s]):
+            np.testing.assert_array_equal(a, b, err_msg=f"step {s}")
+    # the survivor actually carried reads after the kill
+    assert cl.replica_sets[0].failovers > 0 or \
+        not cl.replica_sets[0].replicas[1].alive
+    # the admission path kept shedding (overload never paused) and its
+    # accounting stayed balanced through the failover
+    adm = cl.serving.metrics()["admission"]
+    assert adm["shed_examples"] > 0
+    pending = sum(s.scheduler.pending_examples
+                  for s in cl.serving.registry)
+    assert adm["executed_examples"] + adm["shed_examples"] + pending \
+        == adm["offered_examples"]
+    base_adm = base_cl.serving.metrics()["admission"]
+    assert adm == base_adm     # shedding decisions identical w/ failover
+
+
+def test_master_kill_mid_train_flush_replays_bit_equal():
+    """A master dies after training mutated its optimizer state but
+    before the sync flush lands. Restore-all + rewind + replay must
+    reproduce the fault-free trajectory exactly: final master AND slave
+    tables bit-equal, and the post-recovery predict stream bit-equal."""
+    kill_step = 6
+    base_cl, base_preds, base_rec = run_planes(None)
+    assert base_rec == 0
+    plan = FaultPlan(seed=4, events=[
+        FaultEvent("master-1", "mid_flush", kill_step, "kill")])
+    cl, preds, recoveries = run_planes(plan)
+    assert recoveries == 1
+    assert all(m.alive for m in cl.masters)
+    assert_tables_equal(master_tables(cl), master_tables(base_cl),
+                        "masters after mid-flush kill")
+    assert_tables_equal(slave_tables(cl), slave_tables(base_cl),
+                        "slaves after mid-flush kill")
+    # during replay the slaves are AHEAD of the rolled-back masters, so
+    # pre-kill-step predictions may legitimately differ; from the kill
+    # step on the trajectory must be bit-equal
+    for s in range(kill_step, STEPS):
+        assert len(preds[s]) == len(base_preds[s]), f"step {s}"
+        for a, b in zip(preds[s], base_preds[s]):
+            np.testing.assert_array_equal(a, b, err_msg=f"step {s}")
+
+
+def test_generated_plan_planes_survive():
+    """Property over generated plans: whatever single kill the seeded
+    generator draws (slave replica or master), the planes keep serving
+    (counters balanced, at least one live replica per shard) and the
+    final master state is bit-equal to the fault-free run — slave kills
+    only remove redundancy, master kills are replayed away."""
+    base_cl, _, _ = run_planes(None)
+    want = master_tables(base_cl)
+    for seed in (11, 23):
+        gen = FaultPlan.generate(seed, steps=STEPS,
+                                 masters=["master-0", "master-1"],
+                                 slaves=["slave-0.1", "slave-1.1"])
+        plan = FaultPlan(seed=seed, events=gen.kills()[:1])
+        cl, preds, _ = run_planes(plan)
+        assert len(preds) == STEPS
+        assert_tables_equal(master_tables(cl), want,
+                            f"masters (seed {seed})")
+        for rs in cl.replica_sets:
+            assert any(sh.alive for sh in rs.replicas)
+        adm = cl.serving.metrics()["admission"]
+        pending = sum(s.scheduler.pending_examples
+                      for s in cl.serving.registry)
+        assert adm["executed_examples"] + adm["shed_examples"] \
+            + pending == adm["offered_examples"]

@@ -32,12 +32,15 @@ def pytest_collection_modifyitems(config, items):
         reason="requires a real TPU (non-interpret Pallas)")
     skip_slow = pytest.mark.skip(reason="slow: pass --runslow or RUN_SLOW=1")
     skip_chaos = pytest.mark.skip(reason="chaos: pass --chaos or RUN_CHAOS=1")
+    # match the actual @pytest.mark markers, not item.keywords — keywords
+    # include every parent node's *name*, so the tests/chaos directory
+    # itself would gate even unmarked (in-process, tier-1) tests in it
     for item in items:
-        if "tpu" in item.keywords and not on_tpu:
+        if item.get_closest_marker("tpu") and not on_tpu:
             item.add_marker(skip_tpu)
-        if "slow" in item.keywords and not run_slow:
+        if item.get_closest_marker("slow") and not run_slow:
             item.add_marker(skip_slow)
-        if "chaos" in item.keywords and not run_chaos:
+        if item.get_closest_marker("chaos") and not run_chaos:
             item.add_marker(skip_chaos)
 
 
