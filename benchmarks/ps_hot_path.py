@@ -110,11 +110,21 @@ def main() -> None:
                          "(interpret mode executes grid steps in Python; "
                          "full 1M-row scale is a TPU measurement)")
     ap.add_argument("--pallas-batch", type=int, default=256)
+    ap.add_argument("--sweep-slots", type=int, nargs="*", default=None,
+                    help="map capacities for the HBM/windowed-DMA sweep "
+                         "(default 1M..16M; --quick defaults 1M,4M)")
+    ap.add_argument("--sweep-batch", type=int, default=512)
+    ap.add_argument("--sweep-live", type=int, default=65536,
+                    help="live rows per sweep table (map capacity is the "
+                         "swept quantity; load stays far below growth)")
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--out", default="BENCH_ps_hot_path.json")
     args = ap.parse_args()
     if args.quick:
         args.rows, args.reps = min(args.rows, 100_000), 3
+    if args.sweep_slots is None:
+        args.sweep_slots = [1 << 20, 1 << 22] if args.quick else \
+            [1 << 20, 1 << 21, 1 << 22, 1 << 23, 1 << 24]
 
     from repro.core.ps import MasterShard, SparseTable
     from repro.optim import get_optimizer
@@ -193,6 +203,97 @@ def main() -> None:
         "us_per_batch": p_s * 1e6,
         "note": "interpret mode runs grid steps in Python; on TPU the same "
                 "call compiles to a Mosaic scalar-prefetch DMA pipeline"}
+
+    # -- map-size sweep: fused lookup + FTRL apply vs map capacity ---------
+    # The point: past VMEM_SLOT_BOUND (~2M slots) the probe's key table
+    # cannot stream into VMEM — the windowed-DMA HBM kernel takes over
+    # (placement flips to "hbm") and the fused paths keep running, with
+    # bit-equality gates against the host-authoritative arrays at every
+    # size. Interpret mode on CPU; the Mosaic path is exercised by the
+    # `tpu`-marked smoke test on real hardware.
+    from repro.kernels.hashmap_probe import VMEM_SLOT_BOUND
+    from repro.optim.optimizers import FTRL
+
+    sweep: dict[str, dict] = {}
+    sw_reps = max(2, args.reps // 3)
+    for slots in args.sweep_slots:
+        st = SparseTable(args.dim, ("n", "z"), init_capacity=slots,
+                         backend="pallas")
+        n_live = min(args.sweep_live, slots // 8)   # stay below 25% growth
+        live = np.unique(rng.integers(
+            1, 1 << 62, size=n_live + 1024).astype(np.int64))[:n_live]
+        st.ensure(live)
+        assert st._map.capacity == slots, (st._map.capacity, slots)
+        q_live = rng.choice(live, size=args.sweep_batch, replace=False)
+        q_mixed = np.concatenate([
+            q_live[:args.sweep_batch // 2],
+            rng.integers(1 << 62, (1 << 62) + (1 << 40),
+                         args.sweep_batch // 2).astype(np.int64)])
+        grads = rng.normal(size=(args.sweep_batch, args.dim)) \
+            .astype(np.float32)
+
+        # bit-equality gates BEFORE timing (timing mutates rows)
+        dev = np.asarray(st._gather_device(q_mixed))
+        sl_h = st.lookup(q_mixed)
+        ok = sl_h >= 0
+        host = np.where(ok[:, None],
+                        st._w[np.where(ok, sl_h, 0)].astype(np.float32),
+                        np.float32(0.0))
+        lookup_equal = bool((dev == host).all())
+
+        # FTRL gate: the fused chain (probe→gather→FTRL→scatter over the
+        # HBM/VMEM mirror) must be BIT-EQUAL to the same FTRL kernel run
+        # standalone on host-gathered rows — anything the probe placement
+        # or scatter got wrong shows up here. The numpy oracle differs in
+        # float op order (~1 ulp on w), so it gates at allclose with the
+        # max deviation recorded.
+        opt = FTRL()
+        sl = st.lookup(q_live)
+        w0, slots0 = st.read_rows(sl)
+        ref_w, ref_slots = opt.update_rows(w0, slots0, grads, 0,
+                                           backend="pallas")
+        np_w, np_slots = opt.update_rows(w0, slots0, grads, 0,
+                                         backend="numpy")
+        st.fused_ftrl_update(q_live, sl, grads, alpha=opt.alpha,
+                             beta=opt.beta, l1=opt.l1, l2=opt.l2)
+        w1, slots1 = st.read_rows(sl)
+        ftrl_equal = bool(
+            (w1.astype(np.float32) == ref_w.astype(np.float32)).all()
+            and all((slots1[k] == ref_slots[k]).all() for k in slots1))
+        ftrl_np_dev = float(max(
+            np.abs(w1.astype(np.float32) - np_w.astype(np.float32)).max(),
+            max(np.abs(slots1[k] - np_slots[k]).max() for k in slots1)))
+        ftrl_np_close = bool(np.allclose(w1, np_w, rtol=1e-5, atol=1e-6))
+
+        lk_batches = [q_mixed, np.roll(q_mixed, 7)]
+        lk_s = best_of(st._gather_device, lk_batches, sw_reps)
+        up_s = best_of(
+            lambda b: st.fused_ftrl_update(
+                q_live, sl, grads, alpha=opt.alpha, beta=opt.beta,
+                l1=opt.l1, l2=opt.l2),
+            [q_live], sw_reps)
+        sweep[str(slots)] = {
+            "slots": slots,
+            "live_rows": n_live,
+            "placement": st._dev.placement,
+            "past_vmem_bound": slots > VMEM_SLOT_BOUND,
+            "lookup_us_per_batch": lk_s * 1e6,
+            "lookup_rows_per_sec": args.sweep_batch / lk_s,
+            "ftrl_us_per_batch": up_s * 1e6,
+            "ftrl_rows_per_sec": args.sweep_batch / up_s,
+            "lookup_bit_equal_host": lookup_equal,
+            "ftrl_bit_equal_kernel": ftrl_equal,
+            "ftrl_allclose_numpy": ftrl_np_close,
+            "ftrl_numpy_max_abs_dev": ftrl_np_dev,
+        }
+        del st
+    results["map_size_sweep"] = {
+        "batch": args.sweep_batch, "live_rows": args.sweep_live,
+        "vmem_slot_bound": VMEM_SLOT_BOUND,
+        "sizes": sweep,
+        "note": "interpret mode on CPU; placement flips vmem->hbm past "
+                "the bound — the windowed-DMA kernel is what keeps "
+                ">2M-slot maps device-resident at all"}
 
     speedup = d_s / v_s
     out = {

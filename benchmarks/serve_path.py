@@ -306,6 +306,50 @@ def main() -> None:
         "dense_cache_hits": dc.hits,
     }
 
+    # -- device-resident predict (pallas backend) ---------------------------
+    # The fused serving path end to end: ``pull_request`` answers warm
+    # requests with the cache's combined-group arena block as a DEVICE
+    # array, ``_run_bucket`` pads it on device, and the jitted predict
+    # consumes it — no host-numpy materialization between pull and
+    # predict (``device_blocks`` counts exactly those pulls). Interpret
+    # mode on CPU is slow per call, so this leg runs at a reduced request
+    # size; the gates are parity with the numpy path (bit-equal cold and
+    # warm) and ``device_blocks`` > 0, with the warm ms/predict recorded
+    # for the trajectory.
+    Bd = 16 if args.smoke else 48
+    dpool = np.unique(rng.choice(1 << 40, size=2048).astype(np.int64))
+    dreq = dpool[rng.integers(0, len(dpool), size=(Bd, F))]
+    dev_predict: dict[str, np.ndarray] = {}
+    dev_leg: dict = {}
+    for backend in ("numpy", "pallas"):
+        clb2 = WeiPSCluster(cfg, ClusterConfig(
+            num_master=1, num_slave=2, num_replicas=1, num_partitions=2,
+            ps_backend=backend))
+        populate(clb2, dpool, np.random.default_rng(7))
+        cold = np.asarray(clb2.predict(dreq))         # fills the cache
+        warm = np.asarray(clb2.predict(dreq))
+        dev_predict[backend] = np.stack([cold, warm])
+        if backend == "pallas":
+            t_dev = best_of(lambda: clb2.predict(dreq),
+                            max(2, args.reps // 2))
+            mm = clb2.sync_metrics(0.0)["device_mirror"]
+            dev_leg = {
+                "request_ids": Bd * F,
+                "warm_ms_per_predict": t_dev * 1e3,
+                "device_blocks": clb2.serving.device_blocks,
+                "cache_hit_rate": clb2.serving.scenario().cache.hit_rate,
+                "mirror_key_bytes_uploaded": mm["key_bytes_uploaded"],
+                "mirror_incremental_uploads":
+                    mm["key_incremental_uploads"],
+                "note": "interpret mode on CPU — the leg demonstrates the "
+                        "device-resident block path (pull→pad→predict "
+                        "with no host numpy hop), gated on bit-equality "
+                        "with the numpy backend",
+            }
+    dev_leg["predict_bit_equal_numpy"] = bool(
+        np.array_equal(dev_predict["numpy"], dev_predict["pallas"]))
+    results["device_predict"] = dev_leg
+
     # -- bit-equality gate: cached reads == direct replica reads ------------
     clb = WeiPSCluster(cfg, ClusterConfig(
         num_master=2, num_slave=2, num_replicas=2, num_partitions=4))
@@ -344,7 +388,11 @@ def main() -> None:
           f"(hit rate {results['predict_stage']['cache_hit_rate']:.2f}); "
           f"cold pull: {results['pull_stage']['cold_speedup_vs_seed']:.2f}x; "
           f"warm pull: {results['pull_stage']['warm_speedup_vs_seed']:.1f}x; "
-          f"bit-equal after sync: {results['cache_bit_equal_after_sync']}")
+          f"bit-equal after sync: {results['cache_bit_equal_after_sync']}; "
+          f"device predict blocks: "
+          f"{results['device_predict']['device_blocks']} "
+          f"(bit-equal: "
+          f"{results['device_predict']['predict_bit_equal_numpy']})")
 
 
 if __name__ == "__main__":

@@ -505,6 +505,29 @@ class WeiPSCluster:
         self.replica_sets[shard_id].replicas[replica_idx].kill()
         self.scheduler.mark_dead("slave", shard_id, replica_idx)
 
+    def _device_mirror_metrics(self) -> dict:
+        """Aggregate device-mirror upload counters over every table a
+        pallas path may have mirrored: master training tables, replica
+        serve tables, and scenario cache arenas. All zeros (with
+        ``tables: 0``) under the numpy backend."""
+        agg = {"tables": 0, "syncs": 0, "key_full_uploads": 0,
+               "key_incremental_uploads": 0, "key_bytes_uploaded": 0,
+               "arena_bytes_uploaded": 0}
+        tables = [t for m in self.masters for t in m.tables.values()]
+        tables += [t for rs in self.replica_sets for rep in rs.replicas
+                   for t in rep.tables.values()]
+        tables += [scn.cache.table for scn in self.serving.registry]
+        for t in tables:
+            mm = t.mirror_metrics()
+            if mm is None:
+                continue
+            agg["tables"] += 1
+            for k in ("syncs", "key_full_uploads",
+                      "key_incremental_uploads", "key_bytes_uploaded",
+                      "arena_bytes_uploaded"):
+                agg[k] += mm[k]
+        return agg
+
     def sync_metrics(self, now: float) -> dict:
         from repro.core.monitor import PercentileRing
         lag = max((now - sc.last_record_time for sc in self.scatters
@@ -524,6 +547,7 @@ class WeiPSCluster:
                 [g.stats.dedup_ratio for g in self.gatherers])),
             "replica_failovers": sum(rs.failovers for rs in self.replica_sets),
             "replica_lag_skips": serving["replica_lag_skips"],
+            "device_mirror": self._device_mirror_metrics(),
             "serving": serving,
             # one source of truth for the benchmark and the monitor:
             # joiner counters (late_feedback, join-delay percentiles),

@@ -60,6 +60,17 @@ class IdHashMap:
         # the probe state (kernels/hashmap_probe.py) key their staleness
         # off this counter.
         self.version = 0
+        # dirty-slot journal (off by default — zero overhead for maps with
+        # no device mirror): once ``track_dirty_slots`` arms it, every
+        # mutation records WHICH table slots it wrote, so a mirror can
+        # re-upload just those slots instead of the whole key table on
+        # every version bump. ``_journal_floor`` is the version before
+        # which per-slot knowledge is lost (journal armed later, realloc,
+        # clear, or overflow) — ``dirty_slots_since`` answers None there
+        # and the mirror falls back to a full upload.
+        self._journal: list[tuple[int, np.ndarray]] | None = None
+        self._journal_floor = 0
+        self._journal_slots = 0
         self._alloc(1 << max(4, int(capacity - 1).bit_length()))
 
     def _alloc(self, cap: int) -> None:
@@ -71,6 +82,53 @@ class IdHashMap:
         self._size = 0
         self._tombs = 0
         self.version += 1
+        self._journal_reset()           # layout changed: every slot moved
+
+    # -- dirty-slot journal (device-mirror incremental sync) ----------------
+    def track_dirty_slots(self) -> None:
+        """Arm the journal (idempotent). Mutations before this call are
+        not covered — ``dirty_slots_since`` of an older version answers
+        None (full upload)."""
+        if self._journal is None:
+            self._journal = []
+            self._journal_floor = self.version
+            self._journal_slots = 0
+
+    def _journal_reset(self) -> None:
+        if self._journal is not None:
+            self._journal = []
+        self._journal_floor = self.version
+        self._journal_slots = 0
+
+    def _note_dirty(self, slots: np.ndarray) -> None:
+        if self._journal is None or not len(slots):
+            return
+        # bound journal memory: past a quarter of the capacity a full
+        # upload is cheaper than replaying the log anyway
+        self._journal_slots += len(slots)
+        if self._journal_slots * 4 > self._cap:
+            self._journal_reset()
+            return
+        self._journal.append((self.version, np.asarray(slots, np.int64)))
+
+    def dirty_slots_since(self, version: int) -> np.ndarray | None:
+        """Unique table slots written after ``version``, or None when the
+        journal cannot answer (unarmed, armed later than ``version``,
+        realloc/clear/overflow since) — None means re-upload everything."""
+        if self._journal is None or version < self._journal_floor:
+            return None
+        parts = [s for v, s in self._journal if v > version]
+        if not parts:
+            return np.empty(0, np.int64)
+        return np.unique(np.concatenate(parts))
+
+    def trim_dirty_log(self, version: int) -> None:
+        """Drop journal entries at or below ``version`` — safe once every
+        mirror has synced past it."""
+        if self._journal is None:
+            return
+        self._journal = [(v, s) for v, s in self._journal if v > version]
+        self._journal_slots = int(sum(len(s) for _, s in self._journal))
 
     # -- introspection ------------------------------------------------------
     def __len__(self) -> int:
@@ -116,6 +174,7 @@ class IdHashMap:
         self._size = 0
         self._tombs = 0
         self.version += 1
+        self._journal_reset()           # every slot changed: full upload
 
     def keys(self) -> np.ndarray:
         return self._keys[self._keys > TOMB].copy()    # sentinels are the
@@ -208,6 +267,11 @@ class IdHashMap:
         pos, found = self._probe(ids)
         if found.any():
             self._vals[pos[found]] = vals[found]
+            # value-only rewrites move no keys but DO change the slot→val
+            # mapping a device mirror holds: version them like any other
+            # table mutation so mirrors refresh those slots
+            self.version += 1
+            self._note_dirty(pos[found])
         miss = ~found
         if miss.any():
             self._insert_new(ids[miss], vals[miss])
@@ -256,6 +320,7 @@ class IdHashMap:
         n = len(ids)
         if n == 0:
             return
+        claimed: list[np.ndarray] = []      # journal: slots won per round
         vals = np.asarray(vals, dtype=np.int64)
         pos = home_slots(np.ascontiguousarray(ids), self._shift)
         # int32 pending indices (row counts are far below 2^31): half the
@@ -291,7 +356,11 @@ class IdHashMap:
                     # tombstones come off the tombstone count
                     self._tombs -= int((kf[winmask] == TOMB).sum())
                 self._size += nwin
+                if self._journal is not None and nwin:
+                    claimed.append(cp[winmask])
                 if nwin == len(pending):
+                    if claimed:
+                        self._note_dirty(np.concatenate(claimed))
                     return
                 if whole:
                     # cand IS pending: losers drop out by mask, no O(n)
@@ -321,4 +390,5 @@ class IdHashMap:
             self._size -= k
             self._tombs += k
             self.version += 1
+            self._note_dirty(p)
         return int(len(p))

@@ -44,9 +44,20 @@ class _DeviceMirror:
     structural ``version`` covers the probe state, and the table's
     mutation clock covers the arenas — rows with ``row_version`` past the
     last synced clock are re-uploaded incrementally through the scatter
-    kernel (bulk re-upload when most of the table moved). Fused updates
-    write both sides with the same kernel outputs, then ``mark_synced``
-    — steady-state training batches upload nothing but ids and grads."""
+    kernel (bulk re-upload when most of the table moved). The key limbs
+    sync the same way: the map's dirty-slot journal
+    (``IdHashMap.track_dirty_slots``) names the slots each version bump
+    touched, so steady-state inserts upload a few slots, not the whole
+    table. Fused updates write both sides with the same kernel outputs,
+    then ``mark_synced`` — steady-state training batches upload nothing
+    but ids and grads.
+
+    Placement: maps small enough for the whole-table VMEM probe upload
+    exact-capacity limb arrays; past ``VMEM_SLOT_BOUND`` (or when the
+    table pins ``device_placement``) the limbs are wrap-padded
+    (``hashmap_probe.wrap_pad_limbs``) and probed by the windowed-DMA
+    HBM kernel. Upload traffic is counted (``sync_metrics`` surfaces
+    it)."""
 
     def __init__(self, table: "SparseTable"):
         self._t = table
@@ -54,10 +65,86 @@ class _DeviceMirror:
         self._synced_mut = -1
         self.keys_lo = self.keys_hi = self.slot_of = None
         self.arenas: dict = {}
+        self._placement: Optional[str] = None   # resolved at key sync
+        self._cap = 0                           # capacity at last key sync
+        self._pad = 0                           # wrap-pad rows (hbm only)
+        self.syncs = 0
+        self.key_full_uploads = 0
+        self.key_incremental_uploads = 0
+        self.key_bytes_uploaded = 0
+        self.arena_bytes_uploaded = 0
+        table._map.track_dirty_slots()
 
     @property
     def shift(self) -> int:
         return int(self._t._map.shift)
+
+    @property
+    def placement(self) -> str:
+        """Key-table placement at the last sync ("vmem" | "hbm") — the
+        static arg fused kernel calls must pass so the probe matches the
+        uploaded layout."""
+        assert self._placement is not None, "sync() before placement"
+        return self._placement
+
+    def _resolve_placement(self, cap: int) -> str:
+        forced = self._t.device_placement
+        if forced != "auto":
+            return forced
+        from repro.kernels.hashmap_probe import VMEM_SLOT_BOUND
+        return "hbm" if cap > VMEM_SLOT_BOUND else "vmem"
+
+    def _sync_keys(self, m) -> None:
+        import jax.numpy as jnp
+
+        from repro.kernels import hashmap_probe as _hm
+        from repro.kernels import ops
+        cap = m.capacity
+        placement = self._resolve_placement(cap)
+        slots = None
+        if (self.keys_lo is not None and cap == self._cap
+                and placement == self._placement):
+            slots = m.dirty_slots_since(self._map_version)
+        if slots is None:
+            # full upload: first sync, realloc/rehash, clear, placement
+            # flip, or journal overflow
+            klo, khi = ops.int64_limbs(m.key_table)
+            self._pad = 0
+            if placement == "hbm":
+                klo, khi = _hm.wrap_pad_limbs(klo, khi, cap=cap)
+                self._pad = klo.shape[0] - cap
+            self.keys_lo = jnp.asarray(klo)
+            self.keys_hi = jnp.asarray(khi)
+            self.slot_of = jnp.asarray(m.val_table.astype(np.int32))
+            self.key_full_uploads += 1
+            self.key_bytes_uploaded += (klo.nbytes + khi.nbytes
+                                        + m.capacity * 4)
+        else:
+            if len(slots):
+                klo, khi = ops.int64_limbs(m.key_table[slots])
+                sl = jnp.asarray(slots.astype(np.int32))
+                self.keys_lo = self.keys_lo.at[sl].set(jnp.asarray(klo))
+                self.keys_hi = self.keys_hi.at[sl].set(jnp.asarray(khi))
+                self.slot_of = self.slot_of.at[sl].set(
+                    jnp.asarray(m.val_table[slots].astype(np.int32)))
+                self.key_bytes_uploaded += len(slots) * 12
+                if self._pad:
+                    # dirty slots inside the wrap-pad mirror region must
+                    # land in both places
+                    wrap = slots[slots < self._pad]
+                    if len(wrap):
+                        wlo, whi = ops.int64_limbs(m.key_table[wrap])
+                        wl = jnp.asarray((wrap + cap).astype(np.int32))
+                        self.keys_lo = self.keys_lo.at[wl].set(
+                            jnp.asarray(wlo))
+                        self.keys_hi = self.keys_hi.at[wl].set(
+                            jnp.asarray(whi))
+                        self.key_bytes_uploaded += len(wrap) * 8
+            self.key_incremental_uploads += 1
+        self._placement = placement
+        self._cap = cap
+        self._map_version = m.version
+        m.trim_dirty_log(m.version)
 
     def sync(self) -> None:
         import jax.numpy as jnp
@@ -65,31 +152,41 @@ class _DeviceMirror:
         from repro.kernels import ops
         t = self._t
         m = t._map
+        self.syncs += 1
         if self._map_version != m.version:
-            klo, khi = ops.int64_limbs(m.key_table)
-            self.keys_lo = jnp.asarray(klo)
-            self.keys_hi = jnp.asarray(khi)
-            self.slot_of = jnp.asarray(m.val_table.astype(np.int32))
-            self._map_version = m.version
+            self._sync_keys(m)
         host = {"w": t._w, **t._slots}
+        row_bytes = sum(v.itemsize * v.shape[1] for v in host.values())
         if not self.arenas or self.arenas["w"].shape != t._w.shape:
             self.arenas = {k: jnp.asarray(v) for k, v in host.items()}
+            self.arena_bytes_uploaded += sum(v.nbytes for v in host.values())
         elif self._synced_mut != t._mut:
             top = t._top
             dirty = np.flatnonzero(t.row_version[:top] > self._synced_mut)
             if len(dirty) * 4 > top:
                 self.arenas = {k: jnp.asarray(v) for k, v in host.items()}
+                self.arena_bytes_uploaded += sum(v.nbytes
+                                                 for v in host.values())
             elif len(dirty):
                 sl = dirty.astype(np.int32)
                 self.arenas = {
                     k: ops.embedding_scatter(a, sl, host[k][dirty])
                     for k, a in self.arenas.items()}
+                self.arena_bytes_uploaded += len(dirty) * row_bytes
         self._synced_mut = t._mut
 
     def mark_synced(self) -> None:
         """Record that the device arenas already hold the table's state at
         the current clock (a fused kernel just wrote both sides)."""
         self._synced_mut = self._t._mut
+
+    def metrics(self) -> dict:
+        return {"syncs": self.syncs,
+                "placement": self._placement or "unsynced",
+                "key_full_uploads": self.key_full_uploads,
+                "key_incremental_uploads": self.key_incremental_uploads,
+                "key_bytes_uploaded": self.key_bytes_uploaded,
+                "arena_bytes_uploaded": self.arena_bytes_uploaded}
 
 
 class SparseTable:
@@ -105,6 +202,11 @@ class SparseTable:
         self.dim = dim
         self.dtype = dtype
         self.backend = backend
+        # device key-table placement for the pallas backend: "auto" routes
+        # by capacity (VMEM below ~2M slots, HBM/windowed-DMA above);
+        # "vmem"/"hbm" pin it (tests and benchmarks exercise the HBM path
+        # at small capacities this way)
+        self.device_placement = "auto"
         self.slot_names = tuple(slot_names)
         self._map = IdHashMap(init_capacity)
         cap = max(1, init_capacity)
@@ -342,18 +444,34 @@ class SparseTable:
         self._mut += 1
         self._evict_log.clear()
 
-    def _gather_device(self, ids: np.ndarray) -> np.ndarray:
+    def lookup_device(self, ids: np.ndarray):
         """Serve-path rows via the device-resident mirror: one jitted
         probe→gather chain (``ops.fused_lookup``), missing rows zeros.
-        Bit-equal to the host probe + gather (``tests/test_ps_backend``)."""
+        Bit-equal to the host probe + gather (``tests/test_ps_backend``).
+
+        Returns ``(rows, found, slot)`` where ``rows`` is the DEVICE
+        array (callers that feed a jitted predict keep it on device — no
+        host round-trip) and ``found``/``slot`` are small host arrays:
+        the found mask comes off the device probe (the serve cache counts
+        misses from it instead of re-probing on host) and ``slot`` lets
+        LRU stats update without a host lookup."""
         from repro.kernels import ops
         mir = self._mirror()
         mir.sync()
-        ilo, ihi = ops.int64_limbs(ids)
-        rows, _found = ops.fused_lookup(
+        ilo, ihi = ops.int64_limbs(np.asarray(ids, np.int64))
+        rows, found, slot = ops.fused_lookup(
             mir.keys_lo, mir.keys_hi, mir.slot_of, mir.arenas["w"],
-            ilo, ihi, shift=mir.shift)
+            ilo, ihi, shift=mir.shift, placement=mir.placement)
+        return rows, np.asarray(found), np.asarray(slot)
+
+    def _gather_device(self, ids: np.ndarray) -> np.ndarray:
+        rows, _found, _slot = self.lookup_device(ids)
         return np.asarray(rows, dtype=self.dtype)
+
+    def mirror_metrics(self) -> Optional[dict]:
+        """Device-mirror upload counters (None until a pallas path has
+        touched this table) — aggregated into ``cluster.sync_metrics``."""
+        return self._dev.metrics() if self._dev is not None else None
 
     def fused_ftrl_update(self, ids: np.ndarray, sl: np.ndarray,
                           grads: np.ndarray, *, alpha: float, beta: float,
@@ -374,7 +492,8 @@ class SparseTable:
             mir.keys_lo, mir.keys_hi, mir.slot_of,
             mir.arenas["z"], mir.arenas["n"], mir.arenas["w"],
             ilo, ihi, np.asarray(grads, np.float32),
-            shift=mir.shift, alpha=alpha, beta=beta, l1=l1, l2=l2)
+            shift=mir.shift, alpha=alpha, beta=beta, l1=l1, l2=l2,
+            placement=mir.placement)
         mir.arenas["z"], mir.arenas["n"], mir.arenas["w"] = z_a, n_a, w_a
         assert bool(np.asarray(found).all()), \
             "fused_ftrl_update on ids absent from the map (run ensure first)"

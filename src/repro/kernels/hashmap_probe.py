@@ -31,13 +31,29 @@ Probe structure (identical to the host map):
               carries (cur, pos, found, active) as dense masked vectors —
               no compaction, so shapes stay static for Mosaic.
 
-Memory layout: the key-limb arrays are streamed whole into VMEM per grid
-step (BlockSpec over the full table). That bounds the device-resident
-map at VMEM capacity (~2M slots at 8 B/slot); beyond that the table
-belongs in ANY/HBM memory space with windowed DMA — out of scope here,
-noted in docs/KERNELS.md. Grid is over id blocks; slot gathers are
-vector ``jnp.take(..., mode="clip")`` like the host path (indices are
-in-bounds by construction, clip skips the bounds-check path).
+Memory layout — two placements, one contract:
+
+  * ``hashmap_probe`` (VMEM) streams the key-limb arrays whole into VMEM
+    per grid step (BlockSpec over the full table). Cheapest for small
+    maps, but bounds the device-resident map at VMEM capacity
+    (~2M slots at 8 B/slot).
+  * ``hashmap_probe_hbm`` keeps the key-limb table in the ``pltpu.ANY``
+    memory space (HBM on real hardware) and DMAs fixed-size probe
+    windows (``_DMA_WINDOW`` slots per id) into a double-buffered VMEM
+    scratch with ``pltpu.make_async_copy`` — the copy for id chunk
+    *i+1* is started before chunk *i* is probed, so the DMA latency
+    hides behind the probe arithmetic. VMEM then holds only
+    ``2 · chunk · window`` slots regardless of table size, so map
+    capacity is bounded by HBM, not VMEM. The table is wrap-padded by
+    one window (``wrap_pad_limbs``) so a window starting near the top
+    never wraps mid-DMA.
+
+``ops.hashmap_probe`` dispatches between them on capacity
+(``VMEM_SLOT_BOUND``) unless the caller pins a placement. Both run the
+identical probe: slot gathers are vector ``jnp.take(..., mode="clip")``
+like the host path (indices are in-bounds by construction, clip skips
+the bounds-check path) in the VMEM kernel, and masked window-local
+compares in the HBM kernel.
 
 ``pos`` is garbage where ``found`` is False — same contract as the host
 probe; callers mask.
@@ -49,9 +65,25 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 _WINDOW = 8                         # must match core.hashmap._WINDOW
+
+# -- HBM/windowed-DMA tuning ------------------------------------------------
+# Slots fetched per DMA window. 256 uint32-limb slots = 2 KiB per limb
+# array per id — long enough to amortize DMA issue cost and cover the
+# overwhelming majority of probe chains (≤25 % load keeps cluster runs
+# short) in ONE round, short enough that double-buffering stays tiny.
+_DMA_WINDOW = 256
+# Ids probed per grid step. 8 ids × 256 slots × 2 limbs × 2 buffers
+# = 32 KiB VMEM scratch — the kernel's entire VMEM footprint.
+_DMA_CHUNK = 8
+# Capacity above which ops.hashmap_probe routes to the HBM kernel: the
+# whole-table VMEM kernel needs cap × 8 B of VMEM, which stops fitting
+# around 2M slots (16 MiB of VMEM for the key limbs alone).
+VMEM_SLOT_BOUND = 1 << 21
 
 # ⌊2^64/φ⌋ split into uint32 limbs (lo, hi). Plain ints: jnp scalars
 # created at module scope would be captured as constants by the kernel
@@ -169,3 +201,201 @@ def hashmap_probe(keys_lo: jax.Array, keys_hi: jax.Array,
                    jax.ShapeDtypeStruct((n,), jnp.bool_)],
         interpret=interpret,
     )(keys_lo, keys_hi, ids_lo, ids_hi)
+
+
+# ---------------------------------------------------------------------------
+# HBM-resident table: windowed DMA probe
+# ---------------------------------------------------------------------------
+
+def wrap_pad_limbs(keys_lo, keys_hi, *, cap: int, window: int = _DMA_WINDOW):
+    """Wrap-pad exact-capacity key-limb arrays to ``cap + min(window, cap)``
+    by appending the first window's worth of slots, so a DMA window
+    starting anywhere in ``[0, cap)`` reads ``window`` CONTIGUOUS slots —
+    the copy never wraps mid-transfer. Padded slot ``cap + t`` mirrors
+    slot ``t``; window-local offsets are folded back with
+    ``(start + offset) & (cap - 1)``. Works on host numpy and traced jax
+    arrays alike (the device mirror pre-pads once per upload; the probe
+    wrapper pads ad-hoc inputs on the fly)."""
+    w = min(window, cap)
+    cat = np if isinstance(keys_lo, np.ndarray) else jnp
+    return (cat.concatenate([keys_lo, keys_lo[:w]]),
+            cat.concatenate([keys_hi, keys_hi[:w]]))
+
+
+def _dma_probe_kernel(cur_s, first_s, klo_hbm, khi_hbm, qlo_ref, qhi_ref,
+                      pos_ref, found_ref, act_ref, cur_ref,
+                      pos_out, found_out, act_out, cur_out,
+                      buf_lo, buf_hi, sem, *, cap, window, chunk):
+    """One probe pass over one id chunk: DMA ``window`` consecutive slots
+    per id from the HBM key table into the double-buffered VMEM scratch
+    (prefetching the NEXT chunk's windows first), then resolve as many
+    host-probe rounds as the window covers."""
+    i = pl.program_id(0)
+    nsteps = pl.num_programs(0)
+
+    def copies(slot, step):
+        out = []
+        for c in range(chunk):
+            s = cur_s[step * chunk + c]
+            out.append(pltpu.make_async_copy(
+                klo_hbm.at[pl.ds(s, window)], buf_lo.at[slot, c],
+                sem.at[slot, c, 0]))
+            out.append(pltpu.make_async_copy(
+                khi_hbm.at[pl.ds(s, window)], buf_hi.at[slot, c],
+                sem.at[slot, c, 1]))
+        return out
+
+    @pl.when(i == 0)
+    def _start_first():
+        for cp in copies(0, 0):
+            cp.start()
+
+    @pl.when(i + 1 < nsteps)
+    def _prefetch_next():                   # overlap: next chunk's DMA
+        for cp in copies((i + 1) % 2, i + 1):   # flies while this chunk
+            cp.start()                          # probes
+
+    for cp in copies(i % 2, i):
+        cp.wait()
+
+    kw_lo = buf_lo[i % 2]                               # (chunk, window)
+    kw_hi = buf_hi[i % 2]
+    qlo = qlo_ref[...]
+    qhi = qhi_ref[...]
+    first = first_s[0] == 1
+
+    # The window covers several host-probe rounds at once: on the first
+    # pass, the home slot (offset 0) plus K full 8-slot windows starting
+    # at offset 1; on continuation passes, K windows from offset 0. Host
+    # semantics — rounds resolve strictly in order: the FIRST 8-slot
+    # group containing a hit or an EMPTY slot decides, a hit anywhere in
+    # that group beats an EMPTY in it.
+    start = jnp.where(first, jnp.int32(1), jnp.int32(0))
+    k_groups = jnp.where(first, jnp.int32((window - 1) // _WINDOW),
+                         jnp.int32(window // _WINDOW))
+    off = jax.lax.broadcasted_iota(jnp.int32, (chunk, window), 1)
+    valid = (off >= start) & (off < start + _WINDOW * k_groups)
+    grp = (off - start) // _WINDOW                      # garbage off-valid
+    hitw = (kw_lo == qlo[:, None]) & (kw_hi == qhi[:, None]) & valid
+    emptyw = ((kw_hi == jnp.uint32(_SENT_HI))
+              & (kw_lo == jnp.uint32(0)) & valid)
+    event = hitw | emptyw
+    big = jnp.int32(window)                             # > any group index
+    gmin = jnp.min(jnp.where(event, grp, big), axis=1)  # (chunk,)
+    resolved_w = gmin < big
+    hit_in = hitw & (grp == gmin[:, None])              # resolving group
+    found_w = hit_in.any(axis=1)
+    ploc = jnp.argmax(hit_in, axis=1)                   # first in-group hit
+
+    # first pass: the home slot (offset 0) is checked BEFORE any window
+    hit0 = (kw_lo[:, 0] == qlo) & (kw_hi[:, 0] == qhi)
+    empty0 = ((kw_hi[:, 0] == jnp.uint32(_SENT_HI))
+              & (kw_lo[:, 0] == jnp.uint32(0)))
+    resolved = jnp.where(first, hit0 | empty0 | resolved_w, resolved_w)
+    fnd = jnp.where(first, hit0 | (~hit0 & ~empty0 & found_w), found_w)
+    ploc = jnp.where(first & hit0, jnp.int32(0), ploc)
+
+    cur = cur_ref[...]
+    act = act_ref[...]
+    newly = act & resolved & fnd
+    abspos = (cur + ploc) & jnp.int32(cap - 1)
+    pos_out[...] = jnp.where(newly, abspos, pos_ref[...])
+    found_out[...] = found_ref[...] | newly
+    alive = act & ~resolved
+    act_out[...] = alive
+    adv = start + _WINDOW * k_groups
+    cur_out[...] = jnp.where(alive, (cur + adv) & jnp.int32(cap - 1), cur)
+
+
+def _dma_probe_pass(klo, khi, qlo, qhi, pos, found, active, cur, first, *,
+                    cap, window, chunk, interpret):
+    npad = cur.shape[0]
+    grid = (npad // chunk,)
+    kernel = functools.partial(_dma_probe_kernel, cap=cap, window=window,
+                               chunk=chunk)
+    cspec = pl.BlockSpec((chunk,), lambda i, cur_s, first_s: (i,))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,          # DMA start offsets + round-1 flag
+        grid=grid,
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY),     # klo: stays in
+                  pl.BlockSpec(memory_space=pltpu.ANY),     # khi: HBM
+                  cspec, cspec, cspec, cspec, cspec, cspec],
+        out_specs=[cspec, cspec, cspec, cspec],
+        scratch_shapes=[pltpu.VMEM((2, chunk, window), jnp.uint32),
+                        pltpu.VMEM((2, chunk, window), jnp.uint32),
+                        pltpu.SemaphoreType.DMA((2, chunk, 2))],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((npad,), jnp.int32),
+                   jax.ShapeDtypeStruct((npad,), jnp.bool_),
+                   jax.ShapeDtypeStruct((npad,), jnp.bool_),
+                   jax.ShapeDtypeStruct((npad,), jnp.int32)],
+        interpret=interpret,
+    )(cur, first, klo, khi, qlo, qhi, pos, found, active, cur)
+
+
+def hashmap_probe_hbm(keys_lo: jax.Array, keys_hi: jax.Array,
+                      ids_lo: jax.Array, ids_hi: jax.Array, *,
+                      shift: int, interpret: bool = False,
+                      window: int = _DMA_WINDOW, chunk: int = _DMA_CHUNK):
+    """Probe a slot-id table that LIVES IN HBM (``pltpu.ANY``), windowed
+    DMA per id — same contract and bit-identical results as
+    ``hashmap_probe``, without the VMEM capacity bound.
+
+    Args:
+      keys_lo, keys_hi: (C,) or (C + min(window, C),) uint32 — the key
+        limb arrays, either exact capacity (padded here on the fly) or
+        already wrap-padded by ``wrap_pad_limbs`` (the device mirror
+        uploads them pre-padded so steady-state calls pad nothing).
+      ids_lo, ids_hi: (N,) uint32 query limbs.
+      shift: the map's Fibonacci shift; capacity is ``2**(64 - shift)``
+        (so the true capacity survives padding).
+      window: slots DMA'd per id per pass (clamped to C).
+      chunk: ids probed per grid step.
+
+    Returns ``(pos (N,) int32, found (N,) bool)`` exactly like
+    ``hashmap_probe``.
+    """
+    cap = 1 << (64 - int(shift))
+    w = min(window, cap)
+    n = ids_lo.shape[0]
+    if n == 0:
+        return (jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.bool_))
+    if keys_lo.shape[0] == cap:
+        keys_lo, keys_hi = wrap_pad_limbs(keys_lo, keys_hi, cap=cap,
+                                          window=w)
+    assert keys_lo.shape[0] == cap + w, \
+        f"key table must be cap ({cap}) or wrap-padded (cap + {w})"
+
+    npad = -(-n // chunk) * chunk
+    zpad = npad - n
+    qlo = jnp.concatenate([ids_lo, jnp.zeros((zpad,), jnp.uint32)])
+    qhi = jnp.concatenate([ids_hi, jnp.zeros((zpad,), jnp.uint32)])
+    # sentinel-valued queries can never be stored: probe id 0, force
+    # not-found at the end (same as the VMEM kernel / host probe)
+    bad = (qhi == jnp.uint32(_SENT_HI)) & (qlo <= jnp.uint32(1))
+    qlo = jnp.where(bad, jnp.uint32(0), qlo)
+    qhi = jnp.where(bad, jnp.uint32(0), qhi)
+    home = fib_home_u32(qlo, qhi, shift=shift)
+    active0 = jnp.concatenate([jnp.ones((n,), jnp.bool_),
+                               jnp.zeros((zpad,), jnp.bool_)])
+    max_rounds = cap // _WINDOW + 2
+
+    def cond(state):
+        r, _, _, _, active = state
+        return jnp.logical_and(r < max_rounds, active.any())
+
+    def body(state):
+        r, cur, pos, found, active = state
+        first = (r == 0).astype(jnp.int32).reshape(1)
+        pos, found, active, cur = _dma_probe_pass(
+            keys_lo, keys_hi, qlo, qhi, pos, found, active, cur, first,
+            cap=cap, window=w, chunk=chunk, interpret=interpret)
+        return r + 1, cur, pos, found, active
+
+    init = (jnp.int32(0), home, home, jnp.zeros((npad,), jnp.bool_),
+            active0)
+    _, _, pos, found, _ = jax.lax.while_loop(cond, body, init)
+    return pos[:n], (found & ~bad)[:n]

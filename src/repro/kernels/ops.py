@@ -53,32 +53,57 @@ def embedding_scatter(table, ids, updates):
                                  interpret=_interpret())
 
 
-@functools.partial(jax.jit, static_argnames=("shift",))
-def hashmap_probe(keys_lo, keys_hi, ids_lo, ids_hi, *, shift):
-    return _hm.hashmap_probe(keys_lo, keys_hi, ids_lo, ids_hi,
+def _probe(keys_lo, keys_hi, ids_lo, ids_hi, *, shift, placement):
+    """Placement-dispatched probe (traced): ``"vmem"`` streams the whole
+    key table into VMEM per call (cheapest for small maps), ``"hbm"``
+    keeps it in ANY/HBM and DMAs probe windows (no VMEM capacity bound),
+    ``"auto"`` picks by capacity against ``VMEM_SLOT_BOUND``. The key
+    arrays may be wrap-padded (HBM layout); the VMEM kernel slices the
+    pad back off."""
+    cap = 1 << (64 - int(shift))
+    if placement == "auto":
+        placement = "hbm" if cap > _hm.VMEM_SLOT_BOUND else "vmem"
+    if placement == "hbm":
+        return _hm.hashmap_probe_hbm(keys_lo, keys_hi, ids_lo, ids_hi,
+                                     shift=shift, interpret=_interpret())
+    assert placement == "vmem", f"unknown placement {placement!r}"
+    return _hm.hashmap_probe(keys_lo[:cap], keys_hi[:cap], ids_lo, ids_hi,
                              shift=shift, interpret=_interpret())
 
 
-@functools.partial(jax.jit, static_argnames=("shift",))
+@functools.partial(jax.jit, static_argnames=("shift", "placement"))
+def hashmap_probe(keys_lo, keys_hi, ids_lo, ids_hi, *, shift,
+                  placement="auto"):
+    return _probe(keys_lo, keys_hi, ids_lo, ids_hi, shift=shift,
+                  placement=placement)
+
+
+@functools.partial(jax.jit, static_argnames=("shift", "placement"))
 def fused_lookup(keys_lo, keys_hi, slot_of, arena, ids_lo, ids_hi, *,
-                 shift):
+                 shift, placement="auto"):
     """Fused probe→gather: serve-path lookup against a device-resident
     table mirror, one jit — no host hop between the probe and the row
     gather. ``slot_of`` is the map's value table (key-slot → arena slot,
     int32). Missing rows come back as zeros. Returns (rows (N, D), found
-    (N,) bool)."""
-    pos, found = _hm.hashmap_probe(keys_lo, keys_hi, ids_lo, ids_hi,
-                                   shift=shift, interpret=_interpret())
+    (N,) bool, slot (N,) int32 — arena slots, 0 where not found): the
+    found mask lets callers count cache misses straight off the device
+    probe, the slots let them update host-side LRU stats, neither costs
+    a host re-probe."""
+    pos, found = _probe(keys_lo, keys_hi, ids_lo, ids_hi, shift=shift,
+                        placement=placement)
     slot = jnp.where(found, jnp.take(slot_of, pos, mode="clip"), 0)
     rows = _el.embedding_lookup(arena, slot, interpret=_interpret())
-    return jnp.where(found[:, None], rows, jnp.zeros((), rows.dtype)), found
+    return (jnp.where(found[:, None], rows, jnp.zeros((), rows.dtype)),
+            found, slot)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("shift", "alpha", "beta", "l1", "l2"),
+                   static_argnames=("shift", "alpha", "beta", "l1", "l2",
+                                    "placement"),
                    donate_argnums=(3, 4, 5))
 def fused_ftrl_apply(keys_lo, keys_hi, slot_of, z_arena, n_arena, w_arena,
-                     ids_lo, ids_hi, grads, *, shift, alpha, beta, l1, l2):
+                     ids_lo, ids_hi, grads, *, shift, alpha, beta, l1, l2,
+                     placement="auto"):
     """The fused sparse training hot path, one jit end to end:
     probe → gather (z, n) → FTRL row update → scatter (z', n', w') back
     into the arenas. No stage output ever leaves the device.
@@ -90,8 +115,8 @@ def fused_ftrl_apply(keys_lo, keys_hi, slot_of, z_arena, n_arena, w_arena,
     across batches). Row outputs (z', n', w') are returned as well so the
     host-authoritative arrays can be updated without re-downloading whole
     arenas."""
-    pos, found = _hm.hashmap_probe(keys_lo, keys_hi, ids_lo, ids_hi,
-                                   shift=shift, interpret=_interpret())
+    pos, found = _probe(keys_lo, keys_hi, ids_lo, ids_hi, shift=shift,
+                        placement=placement)
     slot = jnp.where(found, jnp.take(slot_of, pos, mode="clip"), 0)
     z = _el.embedding_lookup(z_arena, slot, interpret=_interpret())
     n = _el.embedding_lookup(n_arena, slot, interpret=_interpret())

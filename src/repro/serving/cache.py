@@ -93,6 +93,31 @@ class ServeCache:
         self.table.last_touch[s] = self._tick
         return block, hit
 
+    def lookup_device(self, ids: np.ndarray):
+        """Device-resident twin of ``lookup`` (pallas backend): ONE jitted
+        probe→gather against the cache table's device mirror returns the
+        combined-group block as a DEVICE array plus the probe's found
+        mask — misses are counted straight off that mask instead of
+        re-probing on host, and the block never round-trips through host
+        numpy on its way to the jitted predict. Rows where the mask is
+        False are zeros (the caller pulls and ``fill``s them, then
+        overlays — see ``ServingPlane._pull_request_device``). Returns
+        ``(block | None, hit)`` with the same cold-path contract as
+        ``lookup``. Hits/misses feed the same lifetime + window counters
+        as the host path."""
+        self._tick += 1
+        if not len(self.table):
+            self.misses += len(ids)
+            return None, np.zeros(len(ids), dtype=bool)
+        rows, hit, slot = self.table.lookup_device(ids)
+        n_hit = int(hit.sum())
+        self.hits += n_hit
+        self.misses += len(ids) - n_hit
+        if n_hit == 0:
+            return None, hit
+        self.table.last_touch[slot[hit]] = self._tick       # LRU signal
+        return rows, hit
+
     def fill(self, ids: np.ndarray, block: np.ndarray) -> None:
         """Install pulled rows — the UNIQUE MISS SET of the ``lookup``
         that preceded this call, so the ids are known absent and the

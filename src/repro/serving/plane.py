@@ -71,6 +71,7 @@ class ServingPlane:
         self.registry = ScenarioRegistry()
         self.shard_pulled_rows = 0          # rows read from replicas
         self.predict_seconds = 0.0
+        self.device_blocks = 0              # pulls answered device-resident
 
     # ------------------------------------------------------------------
     # scenarios
@@ -119,42 +120,77 @@ class ServingPlane:
         return self.replica_sets[sid].read(read,
                                            max_lag=self.max_replica_lag)
 
+    def _pull_miss(self, scn: Scenario, miss_flat: np.ndarray) -> np.ndarray:
+        """Pull + cache-fill the miss set; returns the pulled rows
+        expanded back to ``miss_flat`` order (duplicates included)."""
+        uniq, inverse = np.unique(miss_flat, return_inverse=True)
+        # segment-ordered pull: rows arrive grouped by owner shard;
+        # fold the ordering into the inverse-index expansion below
+        # (rank maps uniq position -> pulled row) instead of paying a
+        # row scatter back into uniq order
+        pulled, order = self.router.pull_block_sorted(
+            uniq, scn.cache.width, self.plan.slave_shard(uniq),
+            lambda sid, seg: self._fetch_block(sid, seg, scn))
+        scn.cache.fill(uniq.take(order, mode="clip"), pulled)
+        rank = np.empty(len(uniq), dtype=np.int64)
+        rank[order] = np.arange(len(uniq), dtype=np.int64)
+        return pulled.take(rank.take(inverse, mode="clip"),
+                           axis=0, mode="clip")
+
     def pull_request(self, ids: np.ndarray,
                      scenario: Optional[str] = None) -> np.ndarray:
         """Combined-group rows for a request's flat ids, in request order
         (duplicates included — no np.unique on the cache-hit path). Cache
         misses are uniqued, pulled through the shared router in owner
-        segments, and installed in the cache."""
+        segments, and installed in the cache. Under the pallas backend
+        the returned block is a DEVICE array (jax) gathered by the fused
+        cache lookup; numpy callers go through ``serve_rows``, which
+        materializes — the predict path (``_run_bucket``) keeps it on
+        device all the way into the jitted predict."""
         scn = self.registry.get(scenario)
         flat = np.asarray(ids, dtype=np.int64).reshape(-1)
+        if self.ps_backend == "pallas":
+            return self._pull_request_device(scn, flat)
         block, hit = scn.cache.lookup(flat)
         if block is None or not hit.all():
             miss_flat = flat if block is None else flat[~hit]
-            uniq, inverse = np.unique(miss_flat, return_inverse=True)
-            # segment-ordered pull: rows arrive grouped by owner shard;
-            # fold the ordering into the inverse-index expansion below
-            # (rank maps uniq position -> pulled row) instead of paying a
-            # row scatter back into uniq order
-            pulled, order = self.router.pull_block_sorted(
-                uniq, scn.cache.width, self.plan.slave_shard(uniq),
-                lambda sid, seg: self._fetch_block(sid, seg, scn))
-            scn.cache.fill(uniq.take(order, mode="clip"), pulled)
-            rank = np.empty(len(uniq), dtype=np.int64)
-            rank[order] = np.arange(len(uniq), dtype=np.int64)
-            expanded = pulled.take(rank.take(inverse, mode="clip"),
-                                   axis=0, mode="clip")
+            expanded = self._pull_miss(scn, miss_flat)
             if block is None:
                 block = expanded               # fully cold: no masked copy
             else:
                 block[~hit] = expanded
         return block
 
+    def _pull_request_device(self, scn: Scenario, flat: np.ndarray):
+        """Device-resident pull: the cache's fused probe+gather answers
+        hits as a device block and counts misses off the device found
+        mask (``ServeCache.lookup_device``); misses are pulled from
+        replicas host-side (replica reads are host numpy by nature),
+        installed in the cache, and OVERLAID onto the device block with
+        one scatter — the combined-group arena block never round-trips
+        through host numpy between pull and predict."""
+        block, hit = scn.cache.lookup_device(flat)
+        if hit.all():
+            self.device_blocks += 1
+            return block
+        expanded = self._pull_miss(scn, flat if block is None
+                                   else flat[~hit])
+        if block is None:
+            # fully cold: the pulled rows ARE the block; hand it to the
+            # device once, here — predict consumes it without another copy
+            return jnp.asarray(expanded)
+        self.device_blocks += 1
+        miss_idx = jnp.asarray(np.flatnonzero(~hit).astype(np.int32))
+        return block.at[miss_idx].set(jnp.asarray(expanded))
+
     def serve_rows(self, ids: np.ndarray,
                    scenario: Optional[str] = None) -> dict[str, np.ndarray]:
-        """Predictor pull path: ``{group: (B, F, dim)}`` serve rows."""
+        """Predictor pull path: ``{group: (B, F, dim)}`` serve rows (host
+        numpy — this is the host-facing API; the device block path stays
+        inside ``_run_bucket``)."""
         scn = self.registry.get(scenario)
         b, f = np.asarray(ids).shape
-        block = self.pull_request(ids, scenario)
+        block = np.asarray(self.pull_request(ids, scenario))
         return {g: block[:, lo:hi].reshape(b, f, hi - lo)
                 for g, (lo, hi) in scn.cache.offsets.items()}
 
@@ -189,13 +225,22 @@ class ServingPlane:
         b, f = ids.shape
         block = self.pull_request(ids, scn.name)       # (b*f, width)
         dense = self.serve_dense(scn.name)
-        if b < bucket:
-            block = np.concatenate(
-                [block, np.zeros(((bucket - b) * f, block.shape[1]),
-                                 block.dtype)])
+        if isinstance(block, jnp.ndarray):
+            # device-resident block (pallas backend): pad on device, feed
+            # the jitted predict directly — no host materialization
+            # anywhere between the cache gather and the logits
+            if b < bucket:
+                block = jnp.concatenate(
+                    [block, jnp.zeros(((bucket - b) * f, block.shape[1]),
+                                      block.dtype)])
+        else:
+            if b < bucket:
+                block = np.concatenate(
+                    [block, np.zeros(((bucket - b) * f, block.shape[1]),
+                                     block.dtype)])
+            block = jnp.asarray(block)
         p = scn.predict_block(
-            jnp.asarray(block),
-            {k: jnp.asarray(v) for k, v in dense.items()})
+            block, {k: jnp.asarray(v) for k, v in dense.items()})
         return np.asarray(p)[:b]
 
     def predict(self, ids: np.ndarray,
@@ -271,6 +316,7 @@ class ServingPlane:
                 [sc.latency for sc in scheds], (50, 99)),
             "shard_pulled_rows": self.shard_pulled_rows,
             "predict_seconds": self.predict_seconds,
+            "device_blocks": self.device_blocks,
             "replica_lag_skips": sum(rs.lag_skips
                                      for rs in self.replica_sets),
         }

@@ -241,3 +241,153 @@ def test_public_kernel_entrypoints_documented():
                 continue                    # re-exported helpers
             doc = (inspect.getdoc(fn) or "").strip()
             assert len(doc) >= 20, f"{mod.__name__}.{name} undocumented"
+
+
+# -- HBM-resident probe: windowed DMA + double-buffered VMEM scratch --------
+# The VMEM kernel streams the whole key table through BlockSpecs, which
+# caps map capacity at VMEM_SLOT_BOUND. The HBM variant keeps the limbs
+# in `pltpu.ANY` and DMAs fixed probe windows into scratch — these tests
+# pin it bit-equal to the host map and the ref oracle across capacity
+# edges, tombstone walks, grown maps, and probe chains that cross DMA
+# window boundaries (forced via tiny windows + crafted hash collisions).
+
+@pytest.mark.parametrize("cap_pow,n_ids,n_del", [
+    (4, 3, 1),             # capacity edge: cap 16 << DMA window (wrap pad)
+    (8, 60, 10),           # one windowed-tail round typical
+    (12, 1000, 200),       # grown map, heavier tombstone load
+    (14, 4000, 0),         # capacity boundary: exactly at 25% load trigger
+])
+def test_hashmap_probe_hbm_matches_host_map(cap_pow, n_ids, n_del):
+    """Forced ``placement="hbm"`` probe is bit-equal to ``IdHashMap._probe``
+    on the same table — found mask, positions, sentinels, tombstones —
+    even when the map is far smaller than one DMA window (wrap pad)."""
+    m, qs = _probe_case(cap_pow, n_ids, n_del, seed=7 + cap_pow)
+    host_pos, host_found = m._probe(qs)
+    klo, khi = ops.int64_limbs(m.key_table)
+    qlo, qhi = ops.int64_limbs(qs)
+    pos, found = ops.hashmap_probe(klo, khi, qlo, qhi,
+                                   shift=int(m.shift), placement="hbm")
+    pos, found = np.asarray(pos), np.asarray(found)
+    np.testing.assert_array_equal(found, host_found)
+    np.testing.assert_array_equal(pos[found], host_pos[host_found])
+    np.testing.assert_array_equal(m.key_table[pos[found]], qs[found])
+
+
+@pytest.mark.parametrize("cap_pow,n_ids,n_del", [(8, 60, 10),
+                                                 (12, 1000, 200)])
+def test_hashmap_probe_hbm_matches_vmem_and_ref(cap_pow, n_ids, n_del):
+    """Triple agreement: HBM windowed-DMA kernel == VMEM streaming kernel
+    == brute-force ref oracle, including pos at found rows."""
+    m, qs = _probe_case(cap_pow, n_ids, n_del, seed=300 + cap_pow)
+    klo, khi = ops.int64_limbs(m.key_table)
+    qlo, qhi = ops.int64_limbs(qs)
+    h_pos, h_found = ops.hashmap_probe(klo, khi, qlo, qhi,
+                                       shift=int(m.shift), placement="hbm")
+    v_pos, v_found = ops.hashmap_probe(klo, khi, qlo, qhi,
+                                       shift=int(m.shift), placement="vmem")
+    r_pos, r_found = ref.hashmap_probe(klo, khi, qlo, qhi,
+                                       shift=int(m.shift))
+    h_found = np.asarray(h_found)
+    np.testing.assert_array_equal(h_found, np.asarray(v_found))
+    np.testing.assert_array_equal(h_found, np.asarray(r_found))
+    np.testing.assert_array_equal(np.asarray(h_pos)[h_found],
+                                  np.asarray(v_pos)[h_found])
+    np.testing.assert_array_equal(np.asarray(h_pos)[h_found],
+                                  np.asarray(r_pos)[h_found])
+
+
+@pytest.mark.parametrize("window,chunk", [(16, 8), (32, 4)])
+def test_hashmap_probe_hbm_window_boundary_chains(window, chunk):
+    """Probe chains LONGER than one DMA window: ids crafted to share a
+    home-slot neighbourhood pile into one collision cluster, so resolving
+    them needs continuation passes (window i exhausted → DMA window i+1).
+    Tiny windows make every cluster cross a boundary; still bit-equal."""
+    from repro.core.hashmap import IdHashMap, home_slots
+    from repro.kernels.hashmap_probe import hashmap_probe_hbm
+    rng = np.random.default_rng(5)
+    m = IdHashMap(1024)
+    cand = rng.choice(1 << 40, size=200_000, replace=False).astype(np.int64)
+    homes = home_slots(cand, m.shift)
+    cluster = cand[(homes >= 100) & (homes < 104)][:48]   # one long chain
+    assert len(cluster) >= 40
+    spread = cand[homes % 7 == 0][:120]
+    ids = np.unique(np.concatenate([cluster, spread]))
+    m.put(ids, np.arange(len(ids)))
+    assert m.capacity == 1024                  # load stays under 25%
+    absent = cand[~np.isin(cand, ids)][:64]
+    qs = np.concatenate([cluster, absent])
+    host_pos, host_found = m._probe(qs)
+    klo, khi = ops.int64_limbs(m.key_table)
+    qlo, qhi = ops.int64_limbs(qs)
+    pos, found = hashmap_probe_hbm(klo, khi, qlo, qhi, shift=int(m.shift),
+                                   interpret=True, window=window,
+                                   chunk=chunk)
+    pos, found = np.asarray(pos), np.asarray(found)
+    np.testing.assert_array_equal(found, host_found)
+    np.testing.assert_array_equal(pos[found], host_pos[host_found])
+
+
+def test_hashmap_probe_hbm_past_vmem_bound():
+    """A 4M-slot map — past VMEM_SLOT_BOUND, where auto placement flips to
+    "hbm" and the old streaming kernel could not run at all. Lookup via
+    the public auto path stays bit-equal to the host map."""
+    from repro.core.hashmap import IdHashMap
+    from repro.kernels.hashmap_probe import VMEM_SLOT_BOUND
+    rng = np.random.default_rng(9)
+    m = IdHashMap(1 << 22)
+    assert m.capacity > VMEM_SLOT_BOUND
+    ids = np.unique(rng.integers(1, 1 << 62, size=4096).astype(np.int64))
+    m.put(ids, np.arange(len(ids)))
+    m.delete(ids[::5])
+    qs = np.concatenate([ids, ids[::5],
+                         rng.integers(1 << 62, (1 << 63) - 1,
+                                      size=256).astype(np.int64)])
+    host_pos, host_found = m._probe(qs)
+    klo, khi = ops.int64_limbs(m.key_table)
+    qlo, qhi = ops.int64_limbs(qs)
+    pos, found = ops.hashmap_probe(klo, khi, qlo, qhi, shift=int(m.shift))
+    pos, found = np.asarray(pos), np.asarray(found)
+    np.testing.assert_array_equal(found, host_found)
+    np.testing.assert_array_equal(pos[found], host_pos[host_found])
+
+
+def test_fused_lookup_found_mask_and_slots():
+    """``fused_lookup``'s third output: arena slots at found rows (the
+    LRU-touch signal ``ServeCache.lookup_device`` consumes) and 0 at
+    misses; rows at misses are zeros; mask matches the host map."""
+    from repro.core.ps import SparseTable
+    rng = np.random.default_rng(3)
+    st = SparseTable(8, ("n", "z"), backend="pallas")
+    ids = np.unique(rng.integers(1, 1 << 40, size=512).astype(np.int64))
+    st.ensure(ids)
+    absent = rng.integers(1 << 41, 1 << 42, size=64).astype(np.int64)
+    qs = np.concatenate([ids[:128], absent])
+    rows, found, slot = st.lookup_device(qs)
+    rows = np.asarray(rows)
+    assert found[:128].all() and not found[128:].any()
+    np.testing.assert_array_equal(slot[found], st.lookup(qs)[found])
+    assert (slot[~found] == 0).all()
+    np.testing.assert_array_equal(rows[~found], 0.0)
+    np.testing.assert_array_equal(rows[found],
+                                  st._w[st.lookup(qs)[found]])
+
+
+@pytest.mark.tpu
+def test_hashmap_probe_hbm_mosaic_smoke():
+    """On real hardware the same kernel lowers through Mosaic (no
+    interpret): DMA window prefetch, semaphores and all. Auto-skipped
+    off-TPU by conftest."""
+    from repro.core.hashmap import IdHashMap
+    rng = np.random.default_rng(1)
+    m = IdHashMap(1 << 12)
+    ids = rng.choice(1 << 40, size=600, replace=False).astype(np.int64)
+    m.put(ids, np.arange(len(ids)))
+    qs = np.concatenate([ids, ids + 1])
+    host_pos, host_found = m._probe(qs)
+    klo, khi = ops.int64_limbs(m.key_table)
+    qlo, qhi = ops.int64_limbs(qs)
+    pos, found = ops.hashmap_probe(klo, khi, qlo, qhi,
+                                   shift=int(m.shift), placement="hbm")
+    pos, found = np.asarray(pos), np.asarray(found)
+    np.testing.assert_array_equal(found, host_found)
+    np.testing.assert_array_equal(pos[found], host_pos[host_found])

@@ -153,3 +153,125 @@ def test_cold_pull_end_to_end_pallas_matches_numpy(rng):
         for g in served["numpy"][i]:
             np.testing.assert_array_equal(served["numpy"][i][g],
                                           served["pallas"][i][g])
+
+
+def test_cluster_forced_hbm_placement_matches_numpy(rng):
+    """Every table in a pallas cluster pinned to the HBM windowed-DMA
+    probe (`device_placement="hbm"`) — training pushes, replica reads,
+    cache fills and warm serves all run through the DMA kernel and stay
+    bit-equal to the numpy cluster; the aggregated mirror metrics confirm
+    the placement actually took."""
+    import dataclasses
+
+    from repro.configs.weips_ctr import FM_FTRL
+    from repro.core.cluster import ClusterConfig, WeiPSCluster
+
+    cfg = dataclasses.replace(FM_FTRL, fields=4)
+    pool = np.unique(_rand_ids(rng, 96, space=1 << 40))
+    req = pool[rng.integers(0, len(pool), size=(6, cfg.fields))]
+    served = {}
+    for backend in ("numpy", "pallas"):
+        cl = WeiPSCluster(cfg, ClusterConfig(
+            num_master=1, num_slave=2, num_replicas=1, num_partitions=2,
+            ps_backend=backend))
+        if backend == "pallas":
+            for shard in (list(cl.masters)
+                          + [r for rs in cl.replica_sets
+                             for r in rs.replicas]):
+                for t in shard.tables.values():
+                    t.device_placement = "hbm"
+            for scn in cl.serving.registry:
+                scn.cache.table.device_placement = "hbm"
+        prng = np.random.default_rng(23)
+        for mid, mids in cl.plan.split_by_master(pool).items():
+            for g, dim in cl.groups.items():
+                cl.masters[mid].apply_batch(
+                    g, mids,
+                    prng.normal(size=(len(mids), dim)).astype(np.float32))
+        cl.sync_tick(0.0)
+        served[backend] = (cl.serve_rows(req), cl.serve_rows(req))
+        if backend == "pallas":
+            assert cl.serving.device_blocks > 0
+            mm = cl.sync_metrics(0.0)["device_mirror"]
+            assert mm["tables"] > 0 and mm["key_bytes_uploaded"] > 0
+            scn = cl.serving.scenario()
+            assert scn.cache.table._dev.placement == "hbm"
+    for i in range(2):
+        for g in served["numpy"][i]:
+            np.testing.assert_array_equal(served["numpy"][i][g],
+                                          served["pallas"][i][g])
+
+
+def test_cold_pull_large_map_pallas_matches_numpy(rng):
+    """End-to-end cold→warm serve through a >2M-slot serving map: the
+    scenario cache arena is rebuilt at 2^22 slots, so auto placement
+    flips to the HBM windowed-DMA probe for every warm cache hit — and
+    the served rows stay bit-equal to the numpy backend throughout."""
+    import dataclasses
+
+    from repro.configs.weips_ctr import FM_FTRL
+    from repro.core.cluster import ClusterConfig, WeiPSCluster
+    from repro.core.ps import SparseTable
+    from repro.kernels.hashmap_probe import VMEM_SLOT_BOUND
+
+    cfg = dataclasses.replace(FM_FTRL, fields=4)
+    pool = np.unique(_rand_ids(rng, 80, space=1 << 40))
+    req = pool[rng.integers(0, len(pool), size=(5, cfg.fields))]
+    served = {}
+    for backend in ("numpy", "pallas"):
+        cl = WeiPSCluster(cfg, ClusterConfig(
+            num_master=1, num_slave=2, num_replicas=1, num_partitions=2,
+            ps_backend=backend))
+        scn = cl.serving.scenario()
+        scn.cache.table = SparseTable(scn.cache.width, backend=backend,
+                                      init_capacity=1 << 22)
+        assert scn.cache.table._map.capacity > VMEM_SLOT_BOUND
+        prng = np.random.default_rng(31)
+        for mid, mids in cl.plan.split_by_master(pool).items():
+            for g, dim in cl.groups.items():
+                cl.masters[mid].apply_batch(
+                    g, mids,
+                    prng.normal(size=(len(mids), dim)).astype(np.float32))
+        cl.sync_tick(0.0)
+        served[backend] = (cl.serve_rows(req), cl.serve_rows(req))
+        if backend == "pallas":
+            assert scn.cache.table._dev.placement == "hbm"
+            assert cl.serving.device_blocks > 0
+    for i in range(2):
+        for g in served["numpy"][i]:
+            np.testing.assert_array_equal(served["numpy"][i][g],
+                                          served["pallas"][i][g])
+
+
+def test_mirror_incremental_key_sync_counters(rng):
+    """The dirty-slot journal keeps mirror key syncs incremental: after
+    the first full upload, inserting a few ids re-uploads only their
+    slots (bytes counted per slot, not per table), visible per-table and
+    aggregated through ``cluster.sync_metrics``."""
+    from repro.core.ps import SparseTable
+
+    st = SparseTable(4, ("n", "z"), backend="pallas",
+                     init_capacity=1 << 12)
+    ids = np.unique(_rand_ids(rng, 256, space=1 << 40))
+    st.ensure(ids)
+    st._gather_device(ids[:32])                  # first sync: full upload
+    m0 = st.mirror_metrics()
+    assert m0["key_full_uploads"] == 1
+    assert m0["key_incremental_uploads"] == 0
+    full_bytes = m0["key_bytes_uploaded"]
+    assert full_bytes > 0
+    fresh = np.unique(_rand_ids(rng, 8, space=1 << 40) + (1 << 41))
+    st.ensure(fresh)
+    st._gather_device(fresh)                     # second sync: journal path
+    m1 = st.mirror_metrics()
+    assert m1["key_full_uploads"] == 1           # no re-upload of the table
+    assert m1["key_incremental_uploads"] == 1
+    delta = m1["key_bytes_uploaded"] - full_bytes
+    assert 0 < delta <= len(fresh) * 2 * 20      # per-slot, not per-table
+    # evict → tombstones flow through the same journal
+    st.evict(ids[:4])
+    rows, found, _ = st.lookup_device(ids[:8])
+    assert not found[:4].any() and found[4:].all()
+    m2 = st.mirror_metrics()
+    assert m2["key_full_uploads"] == 1
+    assert m2["key_incremental_uploads"] == 2

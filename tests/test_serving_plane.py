@@ -430,3 +430,35 @@ def test_serve_driver_generate_resets_between_calls():
     # hot swap between calls still works on the same cache
     drv.hot_swap(params)
     assert drv.generate(tok, steps=2).shape == (2, 2)
+
+
+def test_cache_lookup_device_counts_misses_off_found_mask():
+    """``ServeCache.lookup_device`` (pallas path): hits/misses come off
+    the kernel's found mask — no host re-probe — and land in the SAME
+    lifetime + window counters the host path feeds, so hit-rate SLOs and
+    window stats are backend-agnostic. LRU touch stamps only hit slots."""
+    from repro.serving.cache import ServeCache
+
+    cache = ServeCache({"w": 3}, backend="pallas")
+    ids = np.arange(1, 65, dtype=np.int64)
+    # fully cold: short-circuit, no device probe, all misses
+    block, hit = cache.lookup_device(ids)
+    assert block is None and not hit.any()
+    assert cache.misses == len(ids) and cache.hits == 0
+    cache.fill(ids, np.arange(64 * 3, dtype=np.float32).reshape(64, 3))
+    mixed = np.concatenate([ids[:16], np.arange(1000, 1016,
+                                                dtype=np.int64)])
+    block, hit = cache.lookup_device(mixed)
+    assert hit[:16].all() and not hit[16:].any()
+    assert cache.hits == 16 and cache.misses == len(ids) + 16
+    np.testing.assert_array_equal(
+        np.asarray(block)[:16],
+        np.arange(16 * 3, dtype=np.float32).reshape(16, 3))
+    np.testing.assert_array_equal(np.asarray(block)[16:], 0.0)
+    # window counters see the same deltas as the host path would
+    w = cache.window_stats()
+    assert w["hits"] == 16 and w["misses"] == len(ids) + 16
+    # LRU: hit slots were touched this tick, the rest stay older
+    sl = cache.table.lookup(ids)
+    assert (cache.table.last_touch[sl[:16]] == cache._tick).all()
+    assert (cache.table.last_touch[sl[16:]] < cache._tick).all()
