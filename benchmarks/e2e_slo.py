@@ -19,6 +19,12 @@ Legs:
     reporting per-worker applied counts and the new scatter staleness
     percentiles from worker metrics (simulated seconds: now == step).
 
+``--trace [PATH]`` turns the span tracer on for the whole run and
+exports a Chrome/Perfetto JSON (default ``trace_e2e.json``) covering
+the in-process sweep; with ``--procs`` the multi-process leg exports
+its own cross-process trace next to it (``<PATH minus .json>_procs.json``).
+Inspect either with ``python -m repro.obs.trace <path>``.
+
 Run:  PYTHONPATH=src python benchmarks/e2e_slo.py [--smoke] [--procs]
 Emits BENCH_e2e.json (or --out PATH).
 """
@@ -46,6 +52,9 @@ def main() -> None:
                     help="also run the multi-process runtime leg")
     ap.add_argument("--proc-steps", type=int, default=12)
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--trace", nargs="?", const="trace_e2e.json",
+                    default=None, metavar="PATH",
+                    help="enable span tracing; export Perfetto JSON here")
     ap.add_argument("--out", default="BENCH_e2e.json")
     args = ap.parse_args()
     multipliers = (0.5, 1.0, 2.0, 4.0)
@@ -59,6 +68,11 @@ def main() -> None:
         multipliers = (0.5, 2.0)
 
     from repro.launch.slo import SLOConfig, SLOHarness
+
+    if args.trace:
+        from repro.obs import trace as obs_trace
+        obs_trace.configure(enabled=True, process="slo",
+                            capacity=1 << 16)
 
     def make_cfg(**kw) -> SLOConfig:
         return SLOConfig(rows=args.rows, budget=args.budget,
@@ -96,13 +110,18 @@ def main() -> None:
             results["no_admission_2x"]["pending_examples"],
     }
 
+    if args.trace:
+        n = admitted.export_trace(args.trace)
+        results["trace"] = {"path": args.trace, "events": n}
+        print(f"trace: {n} events -> {args.trace}")
+
     # -- optional multi-process leg -----------------------------------------
     if args.procs:
         from repro.launch.runtime import ClusterRuntime, RuntimeConfig
         with tempfile.TemporaryDirectory() as root:
             rcfg = RuntimeConfig(root=root, num_master=2, num_slave=2,
                                  num_replicas=1, vocab=1 << 12,
-                                 batch_size=64)
+                                 batch_size=64, trace=bool(args.trace))
             with ClusterRuntime(rcfg) as rt:
                 rt.run_to(args.proc_steps)
                 results["procs"] = {
@@ -110,6 +129,12 @@ def main() -> None:
                     "slaves": {n: rt.clients[n].call("metrics")
                                for n in rt.slave_names()},
                 }
+                if args.trace:
+                    ppath = args.trace.removesuffix(".json") + "_procs.json"
+                    n = rt.export_trace(ppath)
+                    results["procs"]["trace"] = {"path": ppath,
+                                                 "events": n}
+                    print(f"procs trace: {n} events -> {ppath}")
 
     out = {
         "config": {**{k: getattr(args, k) for k in

@@ -1,0 +1,77 @@
+#!/usr/bin/env python
+"""Lint: every metric name the cluster's ``MetricsRegistry`` exports
+must be documented in docs/OBSERVABILITY.md.
+
+Builds a small in-process cluster, drives one train batch + sync tick +
+predict so every provider has registered, flattens the registry to
+dotted names, canonicalizes per-scenario / per-group segments to
+``<scenario>`` / ``<group>`` placeholders, and checks each canonical
+name appears as a backtick-quoted token in the doc. Exits 1 listing the
+undocumented names — add the metric's row to the table in
+docs/OBSERVABILITY.md (or rename it) to fix.
+
+Run:  PYTHONPATH=src python scripts/check_metrics_docs.py
+"""
+
+from __future__ import annotations
+
+import argparse
+import re
+import sys
+
+
+def registry_names() -> tuple[list[str], set[str], set[str]]:
+    import numpy as np
+
+    from repro.configs.weips_ctr import FM_FTRL
+    from repro.core import ClusterConfig, WeiPSCluster
+
+    cl = WeiPSCluster(FM_FTRL, ClusterConfig(
+        num_master=1, num_slave=2, num_replicas=1, num_partitions=2))
+    ids = np.arange(64, dtype=np.int64).reshape(8, 8)
+    cl.train_on_batch(ids, np.zeros(8, np.float32), now=0.0)
+    cl.sync_tick(0.0)
+    cl.predict(ids)
+    scenarios = {s.name for s in cl.serving.registry} | \
+        {s.name for s in cl.training.registry}
+    groups = set(cl.groups)
+    return sorted(cl.metrics_registry.collect(1.0)), scenarios, groups
+
+
+def canonicalize(name: str, scenarios: set[str],
+                 groups: set[str]) -> str:
+    parts = []
+    for seg in name.split("."):
+        if seg in scenarios:
+            parts.append("<scenario>")
+        elif seg in groups:
+            parts.append("<group>")
+        else:
+            parts.append(seg)
+    return ".".join(parts)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("doc", nargs="?", default="docs/OBSERVABILITY.md")
+    args = ap.parse_args()
+
+    names, scenarios, groups = registry_names()
+    canonical = sorted({canonicalize(n, scenarios, groups)
+                        for n in names})
+    with open(args.doc) as f:
+        documented = set(re.findall(r"`([^`\n]+)`", f.read()))
+    missing = [n for n in canonical if n not in documented]
+    if missing:
+        print(f"{args.doc} is missing {len(missing)} registered "
+              f"metric name(s):", file=sys.stderr)
+        for n in missing:
+            print(f"  {n}", file=sys.stderr)
+        return 1
+    print(f"check_metrics_docs: {len(canonical)} canonical metric "
+          f"names all documented in {args.doc}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

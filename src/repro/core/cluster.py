@@ -202,6 +202,13 @@ class WeiPSCluster:
 
         self._predict = ctr_model.predict_fn(model_cfg)
 
+        # ---- observability ----------------------------------------------
+        # one registry of stable dotted metric names over every
+        # subsystem's counters; sync_metrics() is a thin tree view of it
+        from repro.obs.metrics import MetricsRegistry
+        self.metrics_registry = MetricsRegistry()
+        self._register_metrics(self.metrics_registry)
+
     # ------------------------------------------------------------------
     # training plane (src/repro/training/)
     # ------------------------------------------------------------------
@@ -528,29 +535,40 @@ class WeiPSCluster:
                 agg[k] += mm[k]
         return agg
 
-    def sync_metrics(self, now: float) -> dict:
+    def _register_metrics(self, reg) -> None:
+        """Wire every subsystem's counters into the cluster's
+        ``MetricsRegistry`` at the exact dotted paths ``sync_metrics``
+        has always exported — the registry's ``tree`` IS the
+        sync-metrics dict, so the schema cannot drift from the registry
+        (tests/test_metrics_schema.py locks both)."""
         from repro.core.monitor import PercentileRing
-        lag = max((now - sc.last_record_time for sc in self.scatters
-                   if sc.shard.alive), default=0.0)
-        serving = self.serving.metrics()
-        return {
-            "sync_lag_seconds": lag,
-            # event→deployed staleness (push→scatter→cache-visible) across
-            # every live scatter consumer — the harness's headline SLO
-            "staleness": PercentileRing.merged_percentiles(
-                [sc.staleness for sc in self.scatters if sc.shard.alive],
-                (50, 99)),
-            "sync_lag_records": self._sync_lag_records(),
-            "pushed_bytes": sum(p.pushed_bytes for p in self.pushers),
-            "queue_bytes": self.queue.produced_bytes,
-            "dedup_ratio": float(np.mean(
-                [g.stats.dedup_ratio for g in self.gatherers])),
-            "replica_failovers": sum(rs.failovers for rs in self.replica_sets),
-            "replica_lag_skips": serving["replica_lag_skips"],
-            "device_mirror": self._device_mirror_metrics(),
-            "serving": serving,
-            # one source of truth for the benchmark and the monitor:
-            # joiner counters (late_feedback, join-delay percentiles),
-            # backpressure shed/throttle counts, dedup/padding ratios
-            "training": self.training.metrics(),
-        }
+        reg.register("sync_lag_seconds", lambda now: max(
+            (now - sc.last_record_time for sc in self.scatters
+             if sc.shard.alive), default=0.0))
+        # event→deployed staleness (push→scatter→cache-visible) across
+        # every live scatter consumer — the harness's headline SLO
+        reg.register("staleness", lambda: PercentileRing.merged_percentiles(
+            [sc.staleness for sc in self.scatters if sc.shard.alive],
+            (50, 99)))
+        reg.register("sync_lag_records", self._sync_lag_records)
+        reg.register("pushed_bytes",
+                     lambda: sum(p.pushed_bytes for p in self.pushers))
+        reg.register("queue_bytes", lambda: self.queue.produced_bytes)
+        reg.register("dedup_ratio", lambda: float(np.mean(
+            [g.stats.dedup_ratio for g in self.gatherers])))
+        reg.register("replica_failovers",
+                     lambda: sum(rs.failovers for rs in self.replica_sets))
+        reg.register("replica_lag_skips",
+                     lambda: sum(rs.lag_skips for rs in self.replica_sets))
+        reg.register("device_mirror", self._device_mirror_metrics)
+        self.serving.register_metrics(reg, prefix="serving")
+        # one source of truth for the benchmark and the monitor:
+        # joiner counters (late_feedback, join-delay percentiles),
+        # backpressure shed/throttle counts, dedup/padding ratios
+        self.training.register_metrics(reg, prefix="training")
+
+    def sync_metrics(self, now: float) -> dict:
+        """Thin view over the metrics registry: the same nested dict
+        this method has returned since PR 2, assembled from the
+        providers each subsystem registered (``repro.obs.metrics``)."""
+        return self.metrics_registry.tree(now)

@@ -725,6 +725,21 @@ class MasterShard:
         if self.collector is not None:
             self.collector.record(group, ids, "delete")
 
+    def register_metrics(self, reg, prefix: str = "") -> None:
+        """Publish this shard's counters into a
+        ``repro.obs.metrics.MetricsRegistry`` (dotted under ``prefix``
+        when given; per-table ``_DeviceMirror`` sync counters under
+        ``<prefix>device_mirror.<group>``)."""
+        from repro.obs.metrics import join
+        reg.register(join(prefix, "step"), lambda: self.step)
+        reg.register(join(prefix, "fused_batches"),
+                     lambda: self.fused_batches)
+        reg.register(join(prefix, "rows"),
+                     lambda: {g: len(t) for g, t in self.tables.items()})
+        reg.register(join(prefix, "device_mirror"),
+                     lambda: {g: m for g, t in self.tables.items()
+                              if (m := t.mirror_metrics()) is not None})
+
     # -- fault tolerance ---------------------------------------------------
     def snapshot(self) -> dict:
         return {
@@ -922,6 +937,15 @@ class SlaveShard:
         assert self.alive, f"slave shard {self.shard_id} is down"
         w, _ = self.tables[group].gather(ids, create=False)
         return w
+
+    def register_metrics(self, reg, prefix: str = "") -> None:
+        """Publish this shard's apply counters into a
+        ``repro.obs.metrics.MetricsRegistry``."""
+        from repro.obs.metrics import join
+        reg.register(join(prefix, "applied"), lambda: self.applied_records)
+        reg.register(join(prefix, "skipped"), lambda: self.skipped_records)
+        reg.register(join(prefix, "rows"),
+                     lambda: {g: len(t) for g, t in self.tables.items()})
 
     # -- hot backup ----------------------------------------------------------
     def full_sync_from(self, other: "SlaveShard") -> None:

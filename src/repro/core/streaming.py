@@ -31,6 +31,7 @@ from typing import Optional
 
 import numpy as np
 
+from repro.obs import trace as obs_trace
 from repro.core.ps import MasterShard, SlaveShard
 from repro.core.queue import Consumer, PartitionedQueue, Record
 from repro.core.routing import RoutingPlan
@@ -158,6 +159,10 @@ class Pusher:
         self._seq: dict[str, int] = {}
         self.pushed_bytes = 0
         self.pushed_records = 0
+        # trace metadata stamped into every record of the current flush
+        # while a sync.push span is open (None when tracing is off, so
+        # the disabled path produces byte-identical records)
+        self._tmeta: Optional[dict] = None
 
     def _next_seq(self, group: str) -> int:
         s = self._seq.get(group, -1) + 1
@@ -177,12 +182,29 @@ class Pusher:
     def push(self, gathered: dict[tuple[str, str], np.ndarray],
              now: float = 0.0) -> int:
         """Returns number of records produced."""
+        tr = obs_trace.get_tracer()
+        sp = None
+        if tr.enabled and gathered:
+            # one flush == one trace: every record produced below carries
+            # this (trace, span, t_push), which crosses the FileQueue
+            # inside the pickled frame and lets the consumer reconstruct
+            # queue dwell + parent its apply under this span
+            sp = tr.begin("sync.push", trace=tr.new_trace(),
+                          producer=self.shard.shard_id,
+                          groups=len(gathered))
+            self._tmeta = {"trace": sp.trace, "span": sp.id,
+                           "t_push": sp.t0}
         n_rec = 0
-        for (group, op), ids in gathered.items():
-            if group.startswith("dense/"):
-                n_rec += self._push_dense(group, op, now)
-            else:
-                n_rec += self._push_sparse(group, op, ids, now)
+        try:
+            for (group, op), ids in gathered.items():
+                if group.startswith("dense/"):
+                    n_rec += self._push_dense(group, op, now)
+                else:
+                    n_rec += self._push_sparse(group, op, ids, now)
+        finally:
+            if sp is not None:
+                tr.end(sp)
+                self._tmeta = None
         self.pushed_records += n_rec
         return n_rec
 
@@ -197,12 +219,14 @@ class Pusher:
         payload = self.transform.encode(
             value.reshape(1, -1).copy(),
             self.shard.dense.slots.get(name, {}))
+        meta = {"codec": self.transform.name, "t": now,
+                "shape": value.shape}
+        if self._tmeta is not None:
+            meta.update(self._tmeta)
         rec = Record(group=group, op="upsert",
                      ids=np.array([ver], np.int64), payload=payload,
                      seq=self._next_seq(group),
-                     producer=self.shard.shard_id,
-                     meta={"codec": self.transform.name, "t": now,
-                           "shape": value.shape})
+                     producer=self.shard.shard_id, meta=meta)
         n = 0
         # dense tensors go to every slave: replicate to one partition per
         # slave shard
@@ -245,19 +269,21 @@ class Pusher:
             recs = []
             for i in range(s, e, self.max_ids_per_record):
                 j = min(i + self.max_ids_per_record, e)
+                # partition stamp: ids route to partitions
+                # deterministically, so each partition is its own
+                # ordered stream — slaves key LWW staleness per
+                # (group, producer, partition), not globally (a
+                # global key would mis-skip a partition's records
+                # when a later flush touched only other partitions)
+                meta = {"codec": self.transform.name, "t": now,
+                        "partition": p}
+                if self._tmeta is not None:
+                    meta.update(self._tmeta)
                 recs.append(Record(
                     group=group, op=op, ids=ids[i:j],
                     payload={} if payload is None
                     else _slice_payload(payload, i, j, len(ids)),
-                    seq=seq, producer=self.shard.shard_id,
-                    # partition stamp: ids route to partitions
-                    # deterministically, so each partition is its own
-                    # ordered stream — slaves key LWW staleness per
-                    # (group, producer, partition), not globally (a
-                    # global key would mis-skip a partition's records
-                    # when a later flush touched only other partitions)
-                    meta={"codec": self.transform.name, "t": now,
-                          "partition": p}))
+                    seq=seq, producer=self.shard.shard_id, meta=meta))
             self.queue.produce_many(p, recs)
             self.pushed_bytes += sum(r.nbytes() for r in recs)
             n += len(recs)
@@ -325,7 +351,11 @@ class Scatter:
                             group=r.group, op=r.op, ids=r.ids[keep],
                             payload=_filter_payload(r.payload, keep),
                             seq=r.seq, producer=r.producer, meta=r.meta)
-        applied = self.shard.apply_batch(recs)
+        tr = obs_trace.get_tracer()
+        if tr.enabled:
+            applied = self._apply_traced(tr, recs)
+        else:
+            applied = self.shard.apply_batch(recs)
         if applied:
             self.last_record_time = applied[-1].meta.get("t", 0.0)
             if now is not None:
@@ -333,6 +363,38 @@ class Scatter:
                     [now - r.meta.get("t", now) for r in applied])
         self.applied += len(applied)
         return len(applied)
+
+    def _apply_traced(self, tr, recs: list) -> list:
+        """Trace-grouped apply: records stamped by one pusher flush (one
+        trace id) apply together so the whole flush shows as one
+        queue-dwell + apply pair under its sync.push parent. Regrouping
+        preserves semantics: within a (group, producer, partition)
+        stream records keep their relative order (dict groups are
+        insertion-ordered), and cross-trace overlap resolves by seq
+        (LWW) exactly as it would in arrival order."""
+        by_trace: dict = {}
+        for r in recs:
+            by_trace.setdefault(r.meta.get("trace"), []).append(r)
+        poll_t0 = tr.clock()
+        applied: list = []
+        for tid, group in by_trace.items():
+            if tid is None:  # records produced before tracing turned on
+                applied += self.shard.apply_batch(group)
+                continue
+            # queue dwell reconstructed consumer-side: produce stamp
+            # (t_push, same CLOCK_MONOTONIC domain across processes on
+            # Linux) → this poll
+            qid = tr.record(
+                "sync.queue", trace=tid,
+                parent=group[0].meta.get("span", 0),
+                t0=min(r.meta.get("t_push", poll_t0) for r in group),
+                t1=poll_t0, records=len(group))
+            # cache.invalidate spans fired by shard.on_apply nest here
+            # via the tracer's implicit context
+            with tr.span("sync.apply", trace=tid, parent=qid,
+                         shard=self.shard.shard_id, records=len(group)):
+                applied += self.shard.apply_batch(group)
+        return applied
 
     def offsets(self) -> dict[int, int]:
         return dict(self.consumer.offsets)

@@ -460,3 +460,9 @@ class SampleJoiner:
             "negatives_dropped": self.negatives_dropped,
             "join_delay": self.join_delay_percentiles(),
         }
+
+    def register_metrics(self, reg, prefix: str = "joiner") -> None:
+        """Publish the joiner counters into a
+        ``repro.obs.metrics.MetricsRegistry`` (same keys as
+        ``metrics()``, under ``prefix``)."""
+        reg.register(prefix, self.metrics)

@@ -141,6 +141,12 @@ class FaultHooks:
         self.events = list(events or [])
         self.fired: list[FaultEvent] = []
         self.skew = 0.0           # cumulative clock skew (seconds)
+        # observability hook: called with each event just BEFORE its
+        # effect executes. A kill destroys the process (and any
+        # in-memory trace ring) instantly, so this is the only moment a
+        # fault annotation / pre-kill span dump can be recorded —
+        # launch/worker.py wires it to the tracer.
+        self.on_fire = None
 
     def arm(self, events: list[FaultEvent]) -> None:
         self.events = list(events)
@@ -163,6 +169,8 @@ class FaultHooks:
                 continue
             self.events.remove(e)
             self.fired.append(e)
+            if self.on_fire is not None:
+                self.on_fire(e)
             if e.kind == "delay":
                 time.sleep(e.value)
             elif e.kind == "skew":

@@ -53,6 +53,8 @@ from repro.launch.chaos import FaultPlan
 from repro.launch.mesh import ProcSlot, make_process_mesh
 from repro.launch.specs import ProcSpec, plan_cluster_procs, proc_spec_for
 from repro.launch.transport import RpcClient, WorkerDied
+from repro.obs import perfetto
+from repro.obs import trace as obs_trace
 
 
 @dataclass
@@ -79,6 +81,9 @@ class RuntimeConfig:
     trigger_min_points: int = 3
     downgrade_cooldown: float = 5.0    # sim-seconds (= steps)
     connect_timeout: float = 120.0     # workers pay the jax import
+    trace: bool = False                # span tracing in every process
+    trace_capacity: int = 1 << 15      # per-process span ring size
+    serve_cache_rows: int = 1 << 16    # slave serve cache (0 disables)
 
 
 @dataclass
@@ -193,7 +198,10 @@ class ClusterRuntime:
                        "num_partitions": cfg.num_partitions,
                        "groups": cfg.groups, "optimizer": cfg.optimizer,
                        "optimizer_kwargs": cfg.optimizer_kwargs,
-                       "codec": cfg.codec, "gather_mode": "realtime"},
+                       "codec": cfg.codec, "gather_mode": "realtime",
+                       "trace": cfg.trace,
+                       "trace_capacity": cfg.trace_capacity,
+                       "serve_cache_rows": cfg.serve_cache_rows},
                       f, indent=2, sort_keys=True)
         with open(os.path.join(cfg.root, "fault_plan.json"), "w") as f:
             f.write(self.plan.to_json())
@@ -230,6 +238,10 @@ class ClusterRuntime:
         self._w_true = rng.normal(0.0, 0.5, size=cfg.vocab)
         self._log_f = open(os.path.join(cfg.root, "logs", "supervisor.log"),
                            "a", buffering=1)
+        os.makedirs(os.path.join(cfg.root, "trace"), exist_ok=True)
+        if cfg.trace:
+            obs_trace.configure(enabled=True, process="supervisor",
+                                capacity=cfg.trace_capacity)
 
     # -- logging ---------------------------------------------------------
     def _log(self, msg: str) -> None:
@@ -327,6 +339,8 @@ class ClusterRuntime:
         the caller (``run_to``) routes that into ``recover``."""
         c, step = self.cfg, self.step
         now = float(step)
+        tr = obs_trace.get_tracer()
+        t_step = tr.clock() if tr.enabled else 0.0
         replaying = step < self._replaying_until
         ids, y = self._batch(step)
         flat = ids.reshape(-1)
@@ -356,6 +370,9 @@ class ClusterRuntime:
             v = self.downgrader.maybe_downgrade(now, self.evaluator)
             if v is not None:
                 self._log(f"domino downgrade -> v{v}")
+        if tr.enabled:
+            tr.record("driver.step", t0=t_step, t1=tr.clock(), step=step,
+                      pushed=pushed, applied=applied)
         return {"step": step, "pushed": pushed, "applied": applied,
                 "p": p}
 
@@ -381,6 +398,8 @@ class ClusterRuntime:
         (tmp + atomic rename), then the supervisor commits the manifest.
         The queue cut is the produced offsets at this instant — every
         record a restored state has already folded in sits below it."""
+        tr = obs_trace.get_tracer()
+        t_ckpt = tr.clock() if tr.enabled else 0.0
         v = self._next_version()
         latest = self.store.latest()
         kind = "full" if (force_full or self._force_full or latest is None
@@ -406,6 +425,9 @@ class ClusterRuntime:
         self.store.commit(man)
         self.versions.current_version = v
         self._force_full = False
+        if tr.enabled:
+            tr.record("ckpt.commit", t0=t_ckpt, t1=tr.clock(), version=v,
+                      kind=kind, step=self.step)
         self._log(f"checkpoint v{v} ({kind}) committed at step {self.step}")
         return v
 
@@ -420,6 +442,10 @@ class ClusterRuntime:
         materialized chain + checkpoint queue offsets, rewind the step
         clock and let ``run_to`` replay the gap deterministically."""
         self.recoveries += 1
+        tr = obs_trace.get_tracer()
+        if tr.enabled:
+            tr.instant("fault.detected", step=self.step)
+        t_rec = tr.clock() if tr.enabled else 0.0
         # the socket EOF can beat the SIGKILLed child's exit becoming
         # visible to waitpid — give the reap a moment
         deadline = time.monotonic() + 10.0
@@ -455,6 +481,9 @@ class ClusterRuntime:
         self._replaying_until = max(self._replaying_until, self.step)
         self._log(f"restored from v{v}; rewinding step "
                   f"{self.step} -> {man.step} (replay)")
+        if tr.enabled:
+            tr.record("recover", t0=t_rec, t1=tr.clock(), version=v,
+                      rewind_to=man.step, workers=",".join(sorted(dead)))
         self.step = man.step
         self._force_full = True
 
@@ -531,6 +560,57 @@ class ClusterRuntime:
             p.wait()
         del self.specs[name]
         self._log(f"replica {name} removed")
+
+    # -- observability -----------------------------------------------------
+    def cluster_metrics(self) -> dict:
+        """Supervisor-side aggregation: every worker's ``metrics`` RPC
+        (each a ``MetricsRegistry.tree()``) keyed by name, plus sums the
+        dashboards want. A dead worker is skipped, not fatal — metrics
+        must stay readable mid-fault."""
+        workers: dict = {}
+        for name, c in self.clients.items():
+            try:
+                workers[name] = c.call("metrics")
+            except (WorkerDied, RuntimeError, OSError):
+                workers[name] = None
+        live = {n: m for n, m in workers.items() if m is not None}
+        agg = {
+            "pushed_records": sum(m.get("pushed_records", 0)
+                                  for m in live.values()),
+            "pushed_bytes": sum(m.get("pushed_bytes", 0)
+                                for m in live.values()),
+            "applied": sum(m.get("applied", 0) for m in live.values()),
+            "skipped": sum(m.get("skipped", 0) for m in live.values()),
+            "staleness_p99": max(
+                (m["staleness"].get("p99", 0.0) or 0.0
+                 for m in live.values() if "staleness" in m),
+                default=0.0),
+        }
+        return {"step": self.step, "recoveries": self.recoveries,
+                "workers": workers, "aggregate": agg}
+
+    def export_trace(self, path: str) -> int:
+        """Merge the supervisor's spans, every live worker's ring
+        (``trace_dump`` RPC), and the pre-kill dump files killed workers
+        left under ``<root>/trace/`` into one Perfetto JSON at ``path``.
+        Returns the number of exported events."""
+        lists = [obs_trace.get_tracer().export()]
+        for name, c in self.clients.items():
+            try:
+                lists.append(c.call("trace_dump"))
+            except (WorkerDied, RuntimeError, OSError):
+                pass
+        dump_dir = os.path.join(self.cfg.root, "trace")
+        for f in sorted(os.listdir(dump_dir)):
+            if not f.endswith(".json"):
+                continue
+            try:
+                with open(os.path.join(dump_dir, f)) as fh:
+                    lists.append(json.load(fh))
+            except (OSError, ValueError):
+                continue
+        spans = perfetto.merge_spans(*lists)
+        return perfetto.write_trace(path, spans)
 
     # -- state inspection (tests) ------------------------------------------
     def master_state(self, group: str = "emb") -> dict:

@@ -252,3 +252,11 @@ class SLOHarness:
             s["examples"] for s in
             out["training"]["scenarios"].values())
         return out
+
+    def export_trace(self, path: str) -> int:
+        """Write the process tracer's span ring (the harness runs every
+        plane in-process) as Perfetto JSON. Returns the event count —
+        0 means the tracer was never ``configure``d on."""
+        from repro.obs import perfetto
+        from repro.obs import trace as obs_trace
+        return perfetto.write_trace(path, obs_trace.get_tracer().export())

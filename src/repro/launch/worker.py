@@ -22,16 +22,59 @@ import argparse
 import json
 import os
 import sys
+from typing import Optional
 
 import numpy as np
 
 from repro.launch.chaos import FaultEvent, FaultHooks
 from repro.launch.transport import RpcServer
+from repro.obs import trace as obs_trace
 
 
 def _load_runtime_cfg(root: str) -> dict:
     with open(os.path.join(root, "runtime.json")) as f:
         return json.load(f)
+
+
+def _setup_observability(worker, root: str, cfg: dict) -> None:
+    """Per-worker tracer + fault-annotation wiring, shared by both
+    roles. With ``cfg["trace"]`` set the worker records spans into its
+    own process-local ring (exported via the ``trace_dump`` RPC);
+    either way every chaos fault firing is annotated, and a ``kill``
+    dumps the ring to ``<root>/trace/`` first — the process (and its
+    ring) is gone one line later, so the dump file is the only way the
+    supervisor's merged timeline keeps the pre-kill spans."""
+    worker.trace_root = os.path.join(root, "trace")
+    if cfg.get("trace"):
+        obs_trace.configure(enabled=True, process=worker.name,
+                            capacity=int(cfg.get("trace_capacity", 1 << 15)))
+
+    def on_fire(e: FaultEvent) -> None:
+        tr = obs_trace.get_tracer()
+        if not tr.enabled:
+            return
+        tr.instant(f"fault.{e.kind}", target=e.target, point=e.point,
+                   step=e.step)
+        if e.kind == "kill":
+            _dump_trace(worker)
+
+    worker.hooks.on_fire = on_fire
+
+
+def _dump_trace(worker) -> Optional[str]:
+    """Write this worker's span ring to ``<root>/trace/<name>.<pid>.json``
+    (atomic rename). Returns the path, or None when tracing is off."""
+    tr = obs_trace.get_tracer()
+    if not tr.enabled:
+        return None
+    os.makedirs(worker.trace_root, exist_ok=True)
+    path = os.path.join(worker.trace_root,
+                        f"{worker.name}.{os.getpid()}.json")
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(tr.export(), f)
+    os.replace(tmp, path)
+    return path
 
 
 def _build_optimizer(cfg: dict):
@@ -79,6 +122,19 @@ class MasterWorker:
         # forces the next checkpoint full after any recovery)
         self._marks: dict[str, int] = {}
         self._dense_marks: dict[str, int] = {}
+        _setup_observability(self, root, cfg)
+        self.registry = self._build_registry()
+
+    def _build_registry(self):
+        from repro.obs.metrics import MetricsRegistry
+        reg = MetricsRegistry()
+        # keep the pre-PR-10 RPC keys (step/pushed_records/pushed_bytes/
+        # rows) stable; the shard adds fused_batches + device_mirror
+        self.shard.register_metrics(reg)
+        reg.register("pushed_records",
+                     lambda: self.pusher.pushed_records)
+        reg.register("pushed_bytes", lambda: self.pusher.pushed_bytes)
+        return reg
 
     # -- RPC methods -----------------------------------------------------
     def pull(self, group: str, ids: np.ndarray) -> np.ndarray:
@@ -150,10 +206,12 @@ class MasterWorker:
         return _sorted_table_state(self.shard.tables[group])
 
     def metrics(self) -> dict:
-        return {"step": self.shard.step,
-                "pushed_records": self.pusher.pushed_records,
-                "pushed_bytes": self.pusher.pushed_bytes,
-                "rows": {g: len(t) for g, t in self.shard.tables.items()}}
+        return self.registry.tree()
+
+    def trace_dump(self) -> list:
+        """Span export RPC — the supervisor merges every worker's ring
+        (plus pre-kill dump files) into one Perfetto timeline."""
+        return obs_trace.get_tracer().export()
 
 
 class SlaveWorker:
@@ -164,6 +222,7 @@ class SlaveWorker:
         from repro.core.queue import FileQueue
         from repro.core.routing import RoutingPlan
         from repro.core.streaming import Scatter
+        from repro.serving.cache import ServeCache
 
         self.name = f"slave-{shard_id}.{replica}"
         self.hooks = FaultHooks(self.name)
@@ -175,6 +234,35 @@ class SlaveWorker:
         self.scatter = Scatter(self.shard, self.queue, self.plan)
         self.scatter.pre_apply = self._pre_apply
         self._cur_step = -1
+        # worker-local serve cache: the multi-process cache-invalidate
+        # stage of the update's causal chain. Lookup RPCs fill it;
+        # every applied scatter batch invalidates the rewritten rows
+        # (``SlaveShard.on_apply``), exactly like the in-process
+        # serving plane. serve_cache_rows=0 disables it.
+        rows = int(cfg.get("serve_cache_rows", 1 << 16))
+        self.cache = ServeCache(self.groups, max_rows=rows) if rows \
+            else None
+        if self.cache is not None:
+            self.shard.on_apply = self._on_applied
+        _setup_observability(self, root, cfg)
+        self.registry = self._build_registry()
+
+    def _build_registry(self):
+        from repro.obs.metrics import MetricsRegistry
+        reg = MetricsRegistry()
+        # pre-PR-10 RPC keys stay: applied/skipped/rows from the shard,
+        # lag/staleness from the scatter; the cache subtree is new
+        self.shard.register_metrics(reg)
+        reg.register("lag", self.scatter.lag)
+        reg.register("staleness",
+                     lambda: self.scatter.staleness.percentiles((50, 99)))
+        if self.cache is not None:
+            self.cache.register_metrics(reg, "cache")
+        return reg
+
+    def _on_applied(self, group: str, ids, op: str) -> None:
+        if group in self.cache.offsets:
+            self.cache.invalidate(ids)
 
     def _pre_apply(self, recs) -> None:
         # offsets already advanced in the consumer's memory, nothing
@@ -190,17 +278,40 @@ class SlaveWorker:
         return self.scatter.poll(max_records, now=now)
 
     def lookup(self, group: str, ids: np.ndarray) -> np.ndarray:
-        return self.shard.lookup(group, np.asarray(ids, np.int64))
+        ids = np.asarray(ids, np.int64)
+        if self.cache is None or group not in self.cache.offsets:
+            return self.shard.lookup(group, ids)
+        block, hit = self.cache.lookup(ids)
+        if block is None or not hit.all():
+            # pull the miss set's COMBINED-group rows once and install
+            # them, so the next lookup for any group hits
+            miss = ids if block is None else ids[~hit]
+            uniq = np.unique(miss)
+            fill = np.empty((len(uniq), self.cache.width), np.float32)
+            for g, (lo, hi) in self.cache.offsets.items():
+                fill[:, lo:hi] = self.shard.lookup(g, uniq)
+            self.cache.fill(uniq, fill)
+            block, hit = self.cache.lookup(ids)
+            if block is None or not hit.all():
+                # the bound-trim evicted part of the fill: serve the
+                # request straight from the shard tables
+                return self.shard.lookup(group, ids)
+        lo, hi = self.cache.offsets[group]
+        return block[:, lo:hi]
 
     def offsets(self) -> dict:
         return self.scatter.offsets()
 
     def seek(self, offsets: dict) -> None:
         self.scatter.seek({int(k): int(v) for k, v in offsets.items()})
+        if self.cache is not None:      # replay rewrites outside on_apply
+            self.cache.clear()
 
     def load_group(self, group: str, ids: np.ndarray,
                    values: np.ndarray) -> None:
         self.shard.tables[group].scatter(np.asarray(ids, np.int64), values)
+        if self.cache is not None:      # bulk load bypasses the stream
+            self.cache.clear()
 
     def clear(self) -> None:
         """Hot-switch prelude: drop serve state + LWW seq memory so a
@@ -211,16 +322,17 @@ class SlaveWorker:
         self.shard._applied_seq = {}
         self.shard.dense = {}
         self.shard.dense_versions = {}
+        if self.cache is not None:
+            self.cache.clear()
 
     def table_state(self, group: str) -> dict:
         return _sorted_table_state(self.shard.tables[group])
 
     def metrics(self) -> dict:
-        return {"applied": self.shard.applied_records,
-                "skipped": self.shard.skipped_records,
-                "lag": self.scatter.lag(),
-                "staleness": self.scatter.staleness.percentiles((50, 99)),
-                "rows": {g: len(t) for g, t in self.shard.tables.items()}}
+        return self.registry.tree()
+
+    def trace_dump(self) -> list:
+        return obs_trace.get_tracer().export()
 
 
 def _dispatch(worker, method: str, kwargs: dict):

@@ -1,0 +1,28 @@
+"""Unified observability subsystem (PR 10).
+
+Two halves, both pure stdlib so any layer (core, serving, launch) can
+import them without adding jax/numpy cost to the hot paths they watch:
+
+* ``obs.trace``   — a low-overhead span tracer (preallocated ring
+  buffer, injectable clock, ~zero cost disabled). Trace ids are stamped
+  into ``Record.meta`` at the Pusher and ride the FileQueue frames, so
+  one streaming update is a single causal span tree across OS
+  processes: push → queue-dwell → scatter-apply → cache-invalidate.
+* ``obs.perfetto`` — Chrome/Perfetto JSON trace export + import +
+  cross-process merge.
+* ``obs.metrics`` — a ``MetricsRegistry`` of counters/gauges/histograms
+  and provider dicts under stable dotted names; the subsystem counters
+  (cluster, serving, training, workers) publish into it and
+  ``WeiPSCluster.sync_metrics()`` is a thin view over it.
+
+``python -m repro.obs.trace <dump.json>`` summarizes an exported trace
+(per-stage p50/p99, slowest-trace tree). See docs/OBSERVABILITY.md.
+"""
+
+from repro.obs.metrics import Counter, Gauge, Histogram, MetricsRegistry
+from repro.obs.trace import Tracer, configure, disable, get_tracer
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "Tracer", "configure", "disable", "get_tracer",
+]

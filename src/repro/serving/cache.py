@@ -23,6 +23,7 @@ from typing import Callable, Optional
 import numpy as np
 
 from repro.core.ps import SparseTable
+from repro.obs import trace as obs_trace
 
 
 class ServeCache:
@@ -148,6 +149,16 @@ class ServeCache:
         if not len(self.table):
             return 0        # nothing cached: keep the training-only
             #                 sync_tick path free of probe work
+        tr = obs_trace.get_tracer()
+        if tr.enabled:
+            # nests under the sync.apply span via the tracer's implicit
+            # context (SlaveShard.on_apply fires inside the apply) —
+            # this is the cache-visible end of the update's causal chain
+            with tr.span("cache.invalidate", ids=len(ids)):
+                return self._invalidate(ids)
+        return self._invalidate(ids)
+
+    def _invalidate(self, ids: np.ndarray) -> int:
         n = self.table.evict(ids)
         if n:
             # a cache is never checkpointed: its table's eviction log
@@ -173,6 +184,11 @@ class ServeCache:
         return {"rows": len(self), "hits": self.hits, "misses": self.misses,
                 "hit_rate": self.hit_rate, "invalidated": self.invalidated,
                 "trims": self.trims}
+
+    def register_metrics(self, reg, prefix: str = "cache") -> None:
+        """Publish the lifetime counters under ``prefix`` in a
+        ``repro.obs.metrics.MetricsRegistry``."""
+        reg.register(prefix, self.stats)
 
     def window_stats(self) -> dict:
         """Counter deltas since the previous ``window_stats`` call, then

@@ -34,6 +34,7 @@ import numpy as np
 
 from repro.configs.weips_ctr import CTRConfig
 from repro.core.routing import RoutingPlan
+from repro.obs import trace as obs_trace
 from repro.models import ctr as ctr_model
 from repro.serving.cache import ServeCache
 from repro.serving.registry import Scenario, ScenarioRegistry
@@ -223,6 +224,12 @@ class ServingPlane:
         ``predict_block`` — the host never copies per-group row
         tensors on this path."""
         b, f = ids.shape
+        with obs_trace.get_tracer().span("serve.bucket", bucket=bucket,
+                                         examples=b):
+            return self._run_bucket_inner(scn, ids, b, f, bucket)
+
+    def _run_bucket_inner(self, scn: Scenario, ids: np.ndarray, b: int,
+                          f: int, bucket: int) -> np.ndarray:
         block = self.pull_request(ids, scn.name)       # (b*f, width)
         dense = self.serve_dense(scn.name)
         if isinstance(block, jnp.ndarray):
@@ -249,9 +256,12 @@ class ServingPlane:
         ``submit`` are left pending for the next ``flush`` — their
         tickets stay valid."""
         scn = self.registry.get(scenario)
-        t0 = time.perf_counter()
-        out = scn.scheduler.run_one(ids)
-        self.predict_seconds += time.perf_counter() - t0
+        t0 = self.clock()
+        with obs_trace.get_tracer().span("serve.predict",
+                                         scenario=scn.name,
+                                         examples=len(ids)):
+            out = scn.scheduler.run_one(ids)
+        self.predict_seconds += self.clock() - t0
         scn.requests += 1
         scn.examples += len(ids)
         return out
@@ -270,9 +280,11 @@ class ServingPlane:
         for tickets the admission policy shed. With ``budget``, at most
         that many examples execute and the rest stays queued."""
         scn = self.registry.get(scenario)
-        t0 = time.perf_counter()
-        out = scn.scheduler.flush(budget=budget)
-        self.predict_seconds += time.perf_counter() - t0
+        t0 = self.clock()
+        with obs_trace.get_tracer().span("serve.flush",
+                                         scenario=scn.name):
+            out = scn.scheduler.flush(budget=budget)
+        self.predict_seconds += self.clock() - t0
         scn.requests += sum(1 for p in out if p is not None)
         scn.examples += sum(len(p) for p in out if p is not None)
         return out
@@ -298,22 +310,49 @@ class ServingPlane:
     # ------------------------------------------------------------------
     # metrics
     # ------------------------------------------------------------------
-    def metrics(self) -> dict:
-        from repro.core.monitor import PercentileRing
-        scheds = [s.scheduler for s in self.registry
-                  if s.scheduler is not None]
+    def _admission_totals(self) -> dict:
         adm = {"offered_requests": 0, "offered_examples": 0,
                "executed_requests": 0, "executed_examples": 0,
                "shed_requests": 0, "shed_examples": 0,
                "shed_depth_requests": 0, "shed_deadline_requests": 0}
-        for sc in scheds:
-            for k, v in sc.adm.as_dict().items():
+        for s in self.registry:
+            if s.scheduler is None:
+                continue
+            for k, v in s.scheduler.adm.as_dict().items():
                 adm[k] += v
+        return adm
+
+    def _latency_percentiles(self) -> dict:
+        from repro.core.monitor import PercentileRing
+        return PercentileRing.merged_percentiles(
+            [s.scheduler.latency for s in self.registry
+             if s.scheduler is not None], (50, 99))
+
+    def register_metrics(self, reg, prefix: str = "serving") -> None:
+        """Publish the plane's counters into a
+        ``repro.obs.metrics.MetricsRegistry`` under stable dotted names
+        (``serving.admission.shed_examples``, ``serving.latency.p99``,
+        …). ``metrics()`` below and the registry's tree are views over
+        the SAME underlying counters."""
+        from repro.obs.metrics import join
+        reg.register(join(prefix, "scenarios"),
+                     lambda: {s.name: s.metrics() for s in self.registry})
+        reg.register(join(prefix, "admission"), self._admission_totals)
+        reg.register(join(prefix, "latency"), self._latency_percentiles)
+        reg.register(join(prefix, "shard_pulled_rows"),
+                     lambda: self.shard_pulled_rows)
+        reg.register(join(prefix, "predict_seconds"),
+                     lambda: self.predict_seconds)
+        reg.register(join(prefix, "device_blocks"),
+                     lambda: self.device_blocks)
+        reg.register(join(prefix, "replica_lag_skips"),
+                     lambda: sum(rs.lag_skips for rs in self.replica_sets))
+
+    def metrics(self) -> dict:
         return {
             "scenarios": {s.name: s.metrics() for s in self.registry},
-            "admission": adm,
-            "latency": PercentileRing.merged_percentiles(
-                [sc.latency for sc in scheds], (50, 99)),
+            "admission": self._admission_totals(),
+            "latency": self._latency_percentiles(),
             "shard_pulled_rows": self.shard_pulled_rows,
             "predict_seconds": self.predict_seconds,
             "device_blocks": self.device_blocks,

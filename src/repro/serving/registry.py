@@ -77,6 +77,14 @@ class ScenarioRegistry:
                            f"(have: {sorted(self._scenarios)})")
         return self._scenarios[key]
 
+    def register_metrics(self, reg, prefix: str = "scenarios") -> None:
+        """Publish every scenario's ``metrics()`` dict under
+        ``<prefix>.<scenario-name>`` in a
+        ``repro.obs.metrics.MetricsRegistry``. Registered as ONE
+        provider so scenarios added later still show up."""
+        reg.register(prefix,
+                     lambda: {s.name: s.metrics() for s in self})
+
     def names(self) -> list[str]:
         return sorted(self._scenarios)
 

@@ -275,6 +275,19 @@ class PredictScheduler:
         self.adm.executed_examples += len(ids)
         return out
 
+    def register_metrics(self, reg, prefix: str = "scheduler") -> None:
+        """Publish this scheduler's admission/latency/batching counters
+        into a ``repro.obs.metrics.MetricsRegistry``."""
+        from repro.obs.metrics import join
+        reg.register(join(prefix, "admission"), self.adm.as_dict)
+        reg.register(join(prefix, "latency"),
+                     lambda: self.latency.percentiles((50, 99)))
+        reg.register(join(prefix, "batches"), lambda: self.stats.batches)
+        reg.register(join(prefix, "padding_fraction"),
+                     lambda: self.stats.padding_fraction)
+        reg.register(join(prefix, "pending_examples"),
+                     lambda: self.pending_examples)
+
     def _run(self, ids: np.ndarray) -> np.ndarray:
         total = len(ids)
         out = np.empty(total, np.float32)

@@ -188,3 +188,16 @@ class TrainPipeline:
             "throttled_ticks": self.throttled_ticks,
             "shed_examples": self.shed_examples,
         }
+
+    def register_metrics(self, reg, prefix: str = "pipeline") -> None:
+        """Publish the pipeline counters (and its joiner's) into a
+        ``repro.obs.metrics.MetricsRegistry``."""
+        from repro.obs.metrics import join
+        self.joiner.register_metrics(reg, join(prefix, "joiner"))
+        reg.register(join(prefix, "buffered"), lambda: self._buffered)
+        reg.register(join(prefix, "pending_feedback"),
+                     lambda: len(self._fb_v))
+        reg.register(join(prefix, "throttled_ticks"),
+                     lambda: self.throttled_ticks)
+        reg.register(join(prefix, "shed_examples"),
+                     lambda: self.shed_examples)

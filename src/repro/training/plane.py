@@ -229,3 +229,11 @@ class TrainingPlane:
     # ------------------------------------------------------------------
     def metrics(self) -> dict:
         return {"scenarios": {s.name: s.metrics() for s in self.registry}}
+
+    def register_metrics(self, reg, prefix: str = "training") -> None:
+        """Publish per-scenario training counters into a
+        ``repro.obs.metrics.MetricsRegistry`` — same shape as
+        ``metrics()``."""
+        from repro.obs.metrics import join
+        reg.register(join(prefix, "scenarios"),
+                     lambda: {s.name: s.metrics() for s in self.registry})

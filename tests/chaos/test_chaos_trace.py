@@ -1,0 +1,117 @@
+"""Cross-process trace propagation under chaos: with
+``RuntimeConfig(trace=True)`` a seeded SIGKILL mid-flush must still
+yield one merged Perfetto export containing the killed worker's
+pre-kill spans (dump file written by the ``on_fire`` hook the instant
+before the SIGKILL), the fault annotation, the supervisor's recovery
+spans, and causally-linked push → queue → apply chains that span OS
+processes — with no orphaned span parents."""
+
+import numpy as np
+import pytest
+
+from _harness import SLAVES, STEPS, make_runtime
+
+from repro.launch.chaos import FaultEvent, FaultPlan
+from repro.obs import perfetto
+from repro.obs import trace as obs_trace
+
+
+@pytest.fixture
+def _reset_tracer():
+    """RuntimeConfig(trace=True) flips the process-global supervisor
+    tracer on; restore the zero-cost disabled state for the rest of
+    the chaos session."""
+    yield
+    obs_trace.disable()
+
+
+@pytest.mark.chaos
+def test_kill_mid_flush_exports_one_causal_trace(tmp_path, _reset_tracer):
+    plan = FaultPlan(seed=0, events=[
+        FaultEvent("master-0", "mid_flush", 5, "kill")])
+    rt = make_runtime(tmp_path, plan, trace=True)
+    try:
+        rt.start()
+        # warm every slave's serve cache over RPC so stream applies
+        # invalidate real rows (the cache.invalidate leg of the chain)
+        warm = np.arange(rt.cfg.vocab, dtype=np.int64)
+        for name in rt.slave_names():
+            rt.clients[name].call("lookup", group="emb", ids=warm)
+        rt.run_to(STEPS)
+        path = str(tmp_path / "chaos_trace.json")
+        n = rt.export_trace(path)
+        assert n > 0
+        metrics = rt.cluster_metrics()
+    finally:
+        rt.shutdown()
+
+    assert rt.recoveries == 1
+    spans = perfetto.load_spans(path)
+    by_name: dict = {}
+    for s in spans:
+        by_name.setdefault(s["name"], []).append(s)
+
+    # -- the fault annotation survived the SIGKILL (pre-kill dump file)
+    kills = by_name.get("fault.kill", [])
+    assert kills, "killed worker's pre-kill dump is missing"
+    assert kills[0]["proc"] == "master-0"
+    assert kills[0]["t1"] is None
+    assert kills[0]["args"]["point"] == "mid_flush"
+
+    # -- supervisor recorded detection + recovery
+    assert by_name.get("fault.detected")
+    recs = by_name.get("recover", [])
+    assert recs and recs[0]["proc"] == "supervisor"
+    assert "master-0" in recs[0]["args"]["workers"]
+    assert by_name.get("driver.step") and by_name.get("ckpt.commit")
+
+    # -- no orphaned span ids: every non-zero parent resolves
+    ids = {s["span"] for s in spans}
+    for s in spans:
+        assert s["parent"] == 0 or s["parent"] in ids, \
+            f"orphaned parent on {s['name']}: {s['parent']:#x}"
+
+    # -- causal chains cross the process boundary: for every queue span
+    # its parent push span lives in a master process, and applies
+    # parent under queues in the same (slave) process
+    pushes = {s["span"]: s for s in by_name.get("sync.push", [])}
+    queues = by_name.get("sync.queue", [])
+    applies = {s["span"]: s for s in by_name.get("sync.apply", [])}
+    assert pushes and queues and applies
+    crossed = 0
+    for q in queues:
+        push = pushes[q["parent"]]
+        assert push["trace"] == q["trace"]
+        assert push["proc"].startswith("master-")
+        assert q["proc"] in SLAVES
+        if push["proc"] != q["proc"]:
+            crossed += 1
+    assert crossed, "no trace crossed a process boundary"
+    for a in applies.values():
+        parent = next(q for q in queues if q["span"] == a["parent"])
+        assert parent["trace"] == a["trace"]
+        assert parent["proc"] == a["proc"]
+
+    # -- the warm serve cache produced invalidations under applies
+    invs = by_name.get("cache.invalidate", [])
+    assert invs, "no cache.invalidate spans despite warmed caches"
+    for inv in invs:
+        assert inv["parent"] in applies
+        assert inv["trace"] == applies[inv["parent"]]["trace"]
+
+    # -- spans from the killed master's FIRST life made it into the
+    # merge: its dump file carries spans with its pre-kill pid salt,
+    # which differs from the respawned master-0's salt
+    m0_salts = {s["span"] >> 32 for s in spans
+                if s["proc"] == "master-0"}
+    assert len(m0_salts) >= 2, \
+        "expected spans from both lives of master-0"
+
+    # -- worker metrics RPC aggregation held up through the fault
+    assert metrics["recoveries"] == 1
+    assert metrics["aggregate"]["applied"] > 0
+    slave_trees = [m for n, m in metrics["workers"].items()
+                   if n.startswith("slave-") and m]
+    assert slave_trees
+    for t in slave_trees:
+        assert t["cache"]["invalidated"] > 0

@@ -7,7 +7,7 @@ import sys
 from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
-DOCS = ("docs/ARCHITECTURE.md", "README.md")
+DOCS = ("docs/ARCHITECTURE.md", "docs/OBSERVABILITY.md", "README.md")
 
 
 def test_architecture_doc_exists():
